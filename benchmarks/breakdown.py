@@ -1,0 +1,48 @@
+"""Fig 5f/5g/5h: runtime breakdown — parameter estimation vs accepted vs
+rejected sample time."""
+
+from __future__ import annotations
+
+import time
+
+from repro.core.framework import estimate_union, warmup
+from repro.core.union_sampler import SetUnionSampler
+from repro.data.workloads import uq1, uq2, uq3
+
+from .common import emit
+
+
+def run_wl(tag, wl, n, warm):
+    t0 = time.perf_counter()
+    wr = warmup(wl.cat, wl.joins, method=warm,
+                **({"rw_max_walks": 2000} if warm == "random_walk" else {}))
+    est = estimate_union(wr.oracle)
+    t_warm = time.perf_counter() - t0
+    s = SetUnionSampler(wl.cat, wl.joins, est.cover, seed=0)
+    t0 = time.perf_counter()
+    ss = s.sample(n)
+    t_sample = time.perf_counter() - t0
+    draws = max(ss.stats.candidate_draws, 1)
+    rej = ss.stats.cover_rejects
+    acc_frac = n / draws
+    t_rej = t_sample * (rej / draws)
+    t_acc = t_sample - t_rej
+    emit(f"fig5fgh_{tag}_{warm}_warmup", t_warm * 1e6, f"n={n}")
+    emit(f"fig5fgh_{tag}_{warm}_accepted", t_acc / n * 1e6,
+         f"accept_frac={acc_frac:.3f}")
+    emit(f"fig5fgh_{tag}_{warm}_rejected", t_rej / max(rej, 1) * 1e6,
+         f"rejects={rej}")
+
+
+def main(small: bool = True) -> None:
+    n = 500 if small else 5000
+    scale = 0.05 if small else 0.3
+    for tag, wl in (("uq1", uq1(scale=scale, overlap=0.3, n_joins=3)),
+                    ("uq2", uq2(scale=scale)),
+                    ("uq3", uq3(scale=scale, overlap=0.3))):
+        for warm in ("histogram", "random_walk"):
+            run_wl(tag, wl, n, warm)
+
+
+if __name__ == "__main__":
+    main(small=False)

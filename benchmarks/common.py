@@ -1,0 +1,30 @@
+"""Shared benchmark utilities: timing + CSV row emission.
+
+Every benchmark module reproduces one paper figure/table (DESIGN.md §9) and
+emits ``name,us_per_call,derived`` CSV rows via :func:`emit`.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+from typing import Callable, Optional
+
+ROWS = []
+
+
+def timed(fn: Callable, repeats: int = 1) -> float:
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        fn()
+    return (time.perf_counter() - t0) / repeats
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    row = f"{name},{us_per_call:.1f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+def header() -> None:
+    print("name,us_per_call,derived", flush=True)

@@ -1,0 +1,31 @@
+"""Fig 5b: SetUnion sampling time vs TPC-H data scale (UQ1)."""
+
+from __future__ import annotations
+
+import time
+
+from repro.core.framework import estimate_union, warmup
+from repro.core.union_sampler import SetUnionSampler
+from repro.data.workloads import uq1
+
+from .common import emit
+
+
+def main(small: bool = True) -> None:
+    scales = [0.05, 0.1] if small else [0.1, 0.3, 0.5, 1.0]
+    n = 300 if small else 3000
+    for sc in scales:
+        wl = uq1(scale=sc, overlap=0.3, seed=0, n_joins=3)
+        for jm in ("ew", "eo"):
+            wr = warmup(wl.cat, wl.joins, method="histogram")
+            est = estimate_union(wr.oracle)
+            s = SetUnionSampler(wl.cat, wl.joins, est.cover, seed=0,
+                                join_method=jm)
+            t0 = time.perf_counter()
+            s.sample(n)
+            dt = time.perf_counter() - t0
+            emit(f"fig5b_uq1_scale{sc}_{jm}", dt / n * 1e6, f"n={n}")
+
+
+if __name__ == "__main__":
+    main(small=False)

@@ -1,0 +1,52 @@
+"""Fig 4a/4b + Fig 5a: error of the |J_i|/|U| ratio estimation.
+
+HISTOGRAM-BASED (+EO join sizes) and RANDOM-WALK vs the exact FULLJOIN ground
+truth, on UQ1 and UQ3, across overlap scales.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.framework import estimate_union, warmup
+from repro.data.workloads import uq1, uq3
+
+from .common import emit, timed
+
+
+def ratio_errors(wl, method, **kw):
+    ex = warmup(wl.cat, wl.joins, method="exact")
+    est_ex = estimate_union(ex.oracle)
+    t0 = time.perf_counter()
+    wr = warmup(wl.cat, wl.joins, method=method, **kw)
+    est = estimate_union(wr.oracle)
+    dt = time.perf_counter() - t0
+    errs = []
+    for j in wl.joins:
+        r_true = ex.oracle.size(j.name) / max(est_ex.union_size_cover, 1e-9)
+        r_est = wr.oracle.size(j.name) / max(est.union_size_cover, 1e-9)
+        if r_true > 0:
+            errs.append(abs(r_est - r_true) / r_true)
+    return float(np.mean(errs)) if errs else 0.0, dt
+
+
+def main(small: bool = True) -> None:
+    scale = 0.05 if small else 0.3
+    overlaps = [0.2, 0.5] if small else [0.1, 0.2, 0.4, 0.6, 0.8]
+    for ov in overlaps:
+        wl = uq1(scale=scale, overlap=ov, seed=0, n_joins=3)
+        err_h, t_h = ratio_errors(wl, "histogram")
+        emit(f"fig4a_uq1_hist_ov{ov}", t_h * 1e6, f"ratio_err={err_h:.3f}")
+        err_r, t_r = ratio_errors(wl, "random_walk",
+                                  rw_max_walks=4000 if small else 20000)
+        emit(f"fig5a_uq1_rw_ov{ov}", t_r * 1e6, f"ratio_err={err_r:.3f}")
+    for ov in overlaps:
+        wl = uq3(scale=scale, overlap=ov, seed=0)
+        err_h, t_h = ratio_errors(wl, "histogram")
+        emit(f"fig4b_uq3_hist_ov{ov}", t_h * 1e6, f"ratio_err={err_h:.3f}")
+
+
+if __name__ == "__main__":
+    main(small=False)

@@ -1,0 +1,43 @@
+"""Fig 4c/4d: union-size estimation runtime — HISTOGRAM-BASED vs FULLJOIN."""
+
+from __future__ import annotations
+
+import time
+
+from repro.core.framework import estimate_union, warmup
+from repro.core.overlap import exact_union_size
+from repro.data.workloads import uq1, uq3
+
+from .common import emit
+
+
+def run_one(tag, wl, rw_walks):
+    t0 = time.perf_counter()
+    wr = warmup(wl.cat, wl.joins, method="histogram")
+    estimate_union(wr.oracle)
+    t_hist = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    wr2 = warmup(wl.cat, wl.joins, method="random_walk", rw_max_walks=rw_walks)
+    estimate_union(wr2.oracle)
+    t_rw = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    full = exact_union_size(wl.cat, wl.joins)
+    t_full = time.perf_counter() - t0
+
+    emit(f"fig4c_{tag}_hist", t_hist * 1e6, f"speedup_vs_fulljoin={t_full/max(t_hist,1e-9):.1f}x")
+    emit(f"fig4c_{tag}_rw", t_rw * 1e6, f"speedup_vs_fulljoin={t_full/max(t_rw,1e-9):.1f}x")
+    emit(f"fig4c_{tag}_fulljoin", t_full * 1e6, f"|U|={full}")
+
+
+def main(small: bool = True) -> None:
+    scale = 0.05 if small else 0.5
+    run_one("uq1", uq1(scale=scale, overlap=0.3, seed=0, n_joins=3),
+            2000 if small else 20000)
+    run_one("uq3", uq3(scale=scale, overlap=0.3, seed=0),
+            2000 if small else 20000)
+
+
+if __name__ == "__main__":
+    main(small=False)

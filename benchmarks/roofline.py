@@ -1,0 +1,44 @@
+"""§Roofline reader: tabulate the dry-run artifacts (not a paper figure).
+
+Reads artifacts/<mesh>/<arch>__<shape>.json produced by repro.launch.dryrun
+and emits one row per cell with the three roofline terms and the bottleneck.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import emit
+
+
+def main(small: bool = True, artifacts: str = "artifacts") -> None:
+    files = sorted(glob.glob(os.path.join(artifacts, "*", "*.json")))
+    if not files:
+        emit("roofline_no_artifacts", 0.0,
+             "run: PYTHONPATH=src python -m repro.launch.dryrun")
+        return
+    for f in files:
+        d = json.load(open(f))
+        mesh = os.path.basename(os.path.dirname(f))
+        tag = f"roofline_{mesh}_{d['arch']}_{d['shape']}"
+        if d.get("skipped"):
+            emit(tag, 0.0, "skipped")
+            continue
+        if "error" in d:
+            emit(tag, 0.0, f"ERROR={d['error'][:60]}")
+            continue
+        r = d["roofline"]
+        dom_t = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        frac = r["compute_s"] / max(dom_t, 1e-12)
+        emit(tag, d.get("compile_s", 0.0) * 1e6,
+             f"dom={r['dominant']};compute_s={r['compute_s']:.3f};"
+             f"memory_s={r['memory_s']:.3f};collective_s={r['collective_s']:.3f};"
+             f"roofline_frac={frac:.3f};"
+             f"mem_GiB={d['memory']['per_device_total']/2**30:.2f};"
+             f"useful={r['useful_flops_ratio']:.3f}")
+
+
+if __name__ == "__main__":
+    main(small=False)

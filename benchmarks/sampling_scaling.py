@@ -1,0 +1,46 @@
+"""Fig 5c/5d/5e: SetUnion sampling time vs sample count N.
+
+Warm-up (HISTOGRAM vs RANDOM-WALK parameters) × join-sampler weights (EW vs
+EO), per workload.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core.framework import estimate_union, warmup
+from repro.core.union_sampler import SetUnionSampler
+from repro.data.workloads import uq1, uq2, uq3
+
+from .common import emit
+
+
+def run_wl(tag, wl, ns, warm="exact", join_method="ew"):
+    wr = warmup(wl.cat, wl.joins, method=warm,
+                **({"rw_max_walks": 2000} if warm == "random_walk" else {}))
+    est = estimate_union(wr.oracle)
+    for n in ns:
+        s = SetUnionSampler(wl.cat, wl.joins, est.cover, seed=0,
+                            join_method=join_method)
+        t0 = time.perf_counter()
+        ss = s.sample(n)
+        dt = time.perf_counter() - t0
+        emit(f"fig5cde_{tag}_{warm}_{join_method}_N{n}", dt / n * 1e6,
+             f"reject_rate={ss.stats.cover_rejects/max(ss.stats.iterations,1):.3f}")
+
+
+def main(small: bool = True) -> None:
+    ns = [200, 1000] if small else [1000, 5000, 20000]
+    scale = 0.05 if small else 0.3
+    wl1 = uq1(scale=scale, overlap=0.3, seed=0, n_joins=3)
+    for wm in ("histogram", "random_walk"):
+        for jm in ("ew", "eo"):
+            run_wl("uq1", wl1, ns, warm=wm, join_method=jm)
+    wl2 = uq2(scale=scale, seed=0)
+    run_wl("uq2", wl2, ns, warm="histogram", join_method="ew")
+    wl3 = uq3(scale=scale, overlap=0.3, seed=0)
+    run_wl("uq3", wl3, ns, warm="histogram", join_method="ew")
+
+
+if __name__ == "__main__":
+    main(small=False)

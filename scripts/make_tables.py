@@ -1,0 +1,40 @@
+"""Generate EXPERIMENTS.md §Dry-run and §Roofline tables from artifacts/."""
+
+import glob
+import json
+import os
+import sys
+
+
+def main(artifacts="artifacts"):
+    for mesh in ("single_pod", "multi_pod"):
+        files = sorted(glob.glob(os.path.join(artifacts, mesh, "*.json")))
+        print(f"\n### {mesh} ({'16x16=256' if mesh=='single_pod' else '2x16x16=512'} chips)\n")
+        print("| arch | shape | compile s | mem/dev GiB | compute s | memory s "
+              "| collective s | dominant | roofline frac | useful | coll GiB (AR/AG/A2A/CP) |")
+        print("|---|---|---|---|---|---|---|---|---|---|---|")
+        for f in files:
+            d = json.load(open(f))
+            arch, shape = d["arch"], d["shape"]
+            if d.get("skipped"):
+                print(f"| {arch} | {shape} | — | — | — | — | — | SKIP | — | — | {d['skipped'][:40]}… |")
+                continue
+            if "error" in d:
+                print(f"| {arch} | {shape} | — | — | — | — | — | ERROR | — | — | {d['error'][:40]} |")
+                continue
+            r = d["roofline"]
+            dom_t = max(r["compute_s"], r["memory_s"], r["collective_s"], 1e-12)
+            frac = r["compute_s"] / dom_t
+            c = d["collectives"]
+            cg = "/".join(f"{c.get(k,0)/2**30:.1f}" for k in
+                          ("all-reduce", "all-gather", "all-to-all",
+                           "collective-permute"))
+            print(f"| {arch} | {shape} | {d['compile_s']:.1f} "
+                  f"| {d['memory']['per_device_total']/2**30:.2f} "
+                  f"| {r['compute_s']:.3f} | {r['memory_s']:.3f} "
+                  f"| {r['collective_s']:.3f} | {r['dominant']} "
+                  f"| {frac:.2f} | {r['useful_flops_ratio']:.2f} | {cg} |")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else "artifacts")

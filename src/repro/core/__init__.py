@@ -1,0 +1,37 @@
+"""Core: the paper's contribution — sampling over the union of joins."""
+
+from .cover import Cover, build_cover, largest_first_order
+from .distributed import DistributedUnionSampler, merge_statistics, merge_streams
+from .framework import (UnionEstimates, WarmupResult, estimate_union,
+                        make_set_union_sampler, warmup)
+from .index import Catalog, SortedIndex, build_index
+from .join_sampler import JoinSampler, SampleBatch
+from .jax_sampler import JaxChainSampler
+from .joins import (JoinNode, JoinSpec, chain_join, full_join,
+                    full_join_matrix, join_size, materialize_residual)
+from .koverlap import KOverlaps, OverlapOracle, k_overlaps
+from .membership import MembershipProber
+from .online import OnlineUnionSampler
+from .overlap import (HistogramOverlap, RandomWalkOverlap, exact_overlap,
+                      exact_union_size)
+from .predicates import Pred, RejectingPredicate, pushdown
+from .relation import Relation, combine_columns, fingerprint128
+from .size_estimation import (RunningMean, WanderJoinSizeEstimator, olken_bound)
+from .splitting import build_template, split_join, split_plans
+from .union_sampler import (BernoulliUnionSampler, DisjointUnionSampler,
+                            SampleSet, SetUnionSampler)
+
+__all__ = [
+    "BernoulliUnionSampler", "Catalog", "Cover", "DisjointUnionSampler",
+    "DistributedUnionSampler", "HistogramOverlap", "JaxChainSampler", "JoinNode", "JoinSampler",
+    "JoinSpec", "KOverlaps", "MembershipProber", "OnlineUnionSampler",
+    "OverlapOracle", "Pred", "RandomWalkOverlap", "RejectingPredicate",
+    "Relation", "RunningMean", "SampleBatch", "SampleSet", "SetUnionSampler",
+    "SortedIndex", "UnionEstimates", "WanderJoinSizeEstimator", "WarmupResult",
+    "build_cover", "build_index", "build_template", "chain_join",
+    "combine_columns", "estimate_union", "exact_overlap", "exact_union_size",
+    "fingerprint128", "full_join", "full_join_matrix", "join_size",
+    "k_overlaps", "largest_first_order", "make_set_union_sampler",
+    "materialize_residual", "merge_statistics", "merge_streams",
+    "olken_bound", "pushdown", "split_join", "split_plans", "warmup",
+]

@@ -1,0 +1,29 @@
+"""Small shared helpers for the core package."""
+
+from __future__ import annotations
+
+from typing import Iterable, Sequence, Tuple, Union
+
+
+def as_tuple(x: Union[str, Sequence[str], None]) -> Tuple[str, ...]:
+    if x is None:
+        return ()
+    if isinstance(x, str):
+        return (x,)
+    return tuple(x)
+
+
+def powerset_with(items: Sequence, member, min_size: int = 2) -> Iterable[Tuple]:
+    """All subsets of ``items`` of size >= min_size that contain ``member``."""
+    others = [x for x in items if x != member]
+    n = len(others)
+    for mask in range(1 << n):
+        sub = [others[i] for i in range(n) if mask >> i & 1]
+        if len(sub) + 1 >= min_size:
+            yield tuple(sorted(sub + [member], key=str))
+
+
+def subsets_of_size(items: Sequence, k: int) -> Iterable[Tuple]:
+    import itertools
+
+    return itertools.combinations(items, k)

@@ -1,0 +1,108 @@
+"""Distributed union sampling for multi-host training (beyond-paper; DESIGN §2/§5).
+
+Two uniformity-preserving, coordination-free schemes:
+
+* **seed-split** (default, zero overhead) — probe-mode Algorithm 1 is
+  *stateless across samples*: each accepted tuple is an independent
+  ``1/|U|`` draw.  Host ``h`` simply runs its own sampler with fold-in seed
+  ``h``; the interleaved global stream is i.i.d. uniform.  This is the direct
+  payoff of the paper's independence guarantee.
+* **hash-partition** — required only for record-mode (which keeps the
+  ``orig_join`` revision record): the tuple-fingerprint space is split into
+  ``world`` partitions; host ``h`` additionally rejects candidates outside
+  partition ``h``, so its record is private and never needs communication.
+  Each host's stream is uniform over its partition ``U_h``; hosts are sampled
+  proportionally to ``|U_h| ≈ |U|/world`` when streams are merged.
+
+Estimator statistics (:class:`RunningMean`) are associative, so periodic
+cross-host refinement is one all-gather + merge (`merge_statistics`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from .cover import Cover
+from .index import Catalog
+from .joins import JoinSpec
+from .size_estimation import RunningMean
+from .union_sampler import SampleSet, SamplerStats, SetUnionSampler
+
+
+def partition_of(fingerprint: np.ndarray, world: int) -> np.ndarray:
+    """Partition id per sample from the primary 64-bit fingerprint."""
+    return (fingerprint[:, 0] % np.uint64(world)).astype(np.int64)
+
+
+class DistributedUnionSampler:
+    """Per-host wrapper around :class:`SetUnionSampler`."""
+
+    def __init__(self, cat: Catalog, joins: Sequence[JoinSpec], cover: Cover,
+                 rank: int, world: int, scheme: str = "seed-split",
+                 membership: str = "probe", join_method: str = "ew",
+                 seed: int = 0):
+        if scheme not in ("seed-split", "hash-partition"):
+            raise ValueError(f"unknown scheme {scheme!r}")
+        if scheme == "seed-split" and membership != "probe":
+            raise ValueError("seed-split requires the stateless probe mode")
+        self.rank, self.world, self.scheme = rank, world, scheme
+        self.inner = SetUnionSampler(
+            cat, joins, cover, membership=membership, join_method=join_method,
+            seed=seed * 1_000_003 + rank)
+
+    def sample(self, n: int, oversample: float = 1.5,
+               max_rounds: int = 64) -> SampleSet:
+        if self.scheme == "seed-split":
+            return self.inner.sample(n)
+        # hash-partition: keep only this rank's partition (extra rejection)
+        got_rows: List[Dict[str, np.ndarray]] = []
+        got_home: List[np.ndarray] = []
+        got_fp: List[np.ndarray] = []
+        count = 0
+        for _ in range(max_rounds):
+            want = max(int((n - count) * self.world * oversample), 32)
+            ss = self.inner.sample(want)
+            mine = partition_of(ss.fingerprint, self.world) == self.rank
+            idx = np.nonzero(mine)[0]
+            if idx.shape[0]:
+                got_rows.append({a: c[idx] for a, c in ss.rows.items()})
+                got_home.append(ss.home[idx])
+                got_fp.append(ss.fingerprint[idx])
+                count += idx.shape[0]
+            if count >= n:
+                break
+        if count < n:
+            raise RuntimeError("hash-partition sampler under-filled")
+        rows = {a: np.concatenate([r[a] for r in got_rows])[:n]
+                for a in got_rows[0]}
+        return SampleSet(self.inner.attrs, rows,
+                         np.concatenate(got_home)[:n],
+                         np.concatenate(got_fp)[:n],
+                         self.inner.stats)
+
+
+def merge_statistics(stats: Sequence[RunningMean]) -> RunningMean:
+    """All-gather + associative merge of per-host estimator statistics."""
+    out = RunningMean()
+    for s in stats:
+        out.merge(s)
+    return out
+
+
+def merge_streams(parts: Sequence[SampleSet], seed: int = 0) -> SampleSet:
+    """Interleave per-host sample streams into one global stream."""
+    rng = np.random.default_rng(seed)
+    attrs = parts[0].attrs
+    rows = {a: np.concatenate([p.rows[a] for p in parts]) for a in attrs}
+    home = np.concatenate([p.home for p in parts])
+    fp = np.concatenate([p.fingerprint for p in parts])
+    perm = rng.permutation(home.shape[0])
+    stats = SamplerStats()
+    for p in parts:
+        for k, v in p.stats.as_dict().items():
+            setattr(stats, k, getattr(stats, k) + v)
+    return SampleSet(attrs, {a: c[perm] for a, c in rows.items()},
+                     home[perm], fp[perm], stats)

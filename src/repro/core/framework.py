@@ -1,0 +1,99 @@
+"""Facade: warm-up → parameter oracle → cover → sampler (paper Fig. overview).
+
+``warmup(cat, joins, method)`` builds the :class:`OverlapOracle` backing both
+Theorem 3 (union size, Eq. 1 diagnostics) and the cover sizes of Algorithm 1:
+
+* ``exact``        — FULLJOIN ground truth (tests / small data only),
+* ``histogram``    — §5 degree-statistics bounds (decentralised setting),
+* ``random_walk``  — §6 wander-join estimates (centralised setting).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .cover import Cover, build_cover
+from .index import Catalog
+from .joins import JoinSpec, join_size
+from .join_sampler import JoinSampler
+from .koverlap import KOverlaps, OverlapOracle, k_overlaps
+from .overlap import (HistogramOverlap, RandomWalkOverlap, exact_join_size_distinct,
+                      exact_overlap)
+from .size_estimation import olken_bound
+from .union_sampler import SampleSet, SetUnionSampler
+
+
+@dataclasses.dataclass
+class WarmupResult:
+    oracle: OverlapOracle
+    method: str
+    seconds: float
+    aux: object = None  # HistogramOverlap / RandomWalkOverlap instance
+
+
+def _exact_size_fn(cat: Catalog):
+    def f(j: JoinSpec) -> float:
+        if j.is_cyclic:
+            return float(exact_join_size_distinct(cat, j))
+        # duplicate-free base relations => join output duplicate-free, so the
+        # EW total weight IS the distinct size (cheap, no materialisation).
+        return JoinSampler(cat, j, method="ew").exact_acyclic_size()
+    return f
+
+
+def warmup(cat: Catalog, joins: Sequence[JoinSpec], method: str = "exact",
+           seed: int = 0, rw_batch: int = 512,
+           rw_rel_halfwidth: float = 0.25,
+           rw_max_walks: int = 20_000,
+           hist_mode: str = "max") -> WarmupResult:
+    joins = list(joins)
+    t0 = time.perf_counter()
+    if method == "exact":
+        oracle = OverlapOracle(lambda d: exact_overlap(cat, d),
+                               _exact_size_fn(cat), joins)
+        aux = None
+    elif method == "histogram":
+        hist = HistogramOverlap(cat, joins, mode=hist_mode)
+        oracle = OverlapOracle(hist.estimate, lambda j: olken_bound(cat, j), joins)
+        aux = hist
+    elif method == "random_walk":
+        rw = RandomWalkOverlap(cat, joins, seed=seed, batch=rw_batch)
+        oracle = OverlapOracle(
+            lambda d: rw.estimate(d, rel_halfwidth=rw_rel_halfwidth,
+                                  max_walks=rw_max_walks).value,
+            lambda j: rw.join_size(j), joins)
+        aux = rw
+    else:
+        raise ValueError(f"unknown warmup method {method!r}")
+    return WarmupResult(oracle, method, time.perf_counter() - t0, aux)
+
+
+@dataclasses.dataclass
+class UnionEstimates:
+    cover: Cover
+    koverlaps: KOverlaps
+    union_size_cover: float     # Σ |J'_i| (drives Algorithm 1's selection)
+    union_size_eq1: float       # Eq. 1 via Theorem 3 (diagnostic consistency)
+
+
+def estimate_union(oracle: OverlapOracle,
+                   order: Optional[Sequence[str]] = None) -> UnionEstimates:
+    cover = build_cover(oracle, order)
+    ko = k_overlaps(oracle)
+    return UnionEstimates(cover, ko, cover.union_size, ko.union_size())
+
+
+def make_set_union_sampler(cat: Catalog, joins: Sequence[JoinSpec],
+                           method: str = "exact", membership: str = "probe",
+                           join_method: str = "ew", seed: int = 0,
+                           order: Optional[Sequence[str]] = None,
+                           **warmup_kw) -> Tuple[SetUnionSampler, UnionEstimates, WarmupResult]:
+    wr = warmup(cat, joins, method=method, seed=seed, **warmup_kw)
+    est = estimate_union(wr.oracle, order)
+    sampler = SetUnionSampler(cat, joins, est.cover, membership=membership,
+                              join_method=join_method, seed=seed)
+    return sampler, est, wr

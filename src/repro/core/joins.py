@@ -1,0 +1,292 @@
+"""Join specifications: chain, acyclic (tree), and cyclic joins.
+
+A join is an ordered list of :class:`JoinNode`.  Tree nodes reference a parent
+node and equi-join it on ``edge_attrs`` (attribute names are standardised
+across relations, as the paper assumes).  Cyclic joins are represented the way
+the paper (following Zhao et al. [38]) evaluates them: an acyclic *skeleton*
+tree plus *residual* nodes whose edge attributes may span several earlier
+relations (the residual set is typically materialised into one relation by
+:func:`materialize_residual`).
+
+All joins keep their full concatenated output schema (every base attribute
+survives; join attributes appear once) — this is what makes batched
+membership probes exact (see :mod:`repro.core.membership`).
+
+``full_join`` materialises the result with vectorised sorted-index expansion
+(prefix offsets + ``np.repeat`` gathers) — it is the FULLJOIN baseline of the
+paper's evaluation, not a subroutine of the samplers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .catalog_util import as_tuple
+from .index import Catalog
+from .relation import Relation, combine_columns
+
+
+@dataclasses.dataclass
+class JoinNode:
+    alias: str
+    relation: Relation
+    parent: Optional[str]            # alias of parent (tree nodes); None for root
+    edge_attrs: Tuple[str, ...]      # equi-join attributes shared with parent/earlier output
+    kind: str = "tree"               # "tree" (incl. root) | "residual"
+
+    def __post_init__(self) -> None:
+        self.edge_attrs = as_tuple(self.edge_attrs)
+
+
+class JoinSpec:
+    """An ordered join over base relations (chain / acyclic / cyclic)."""
+
+    def __init__(self, name: str, nodes: Sequence[JoinNode]):
+        self.name = name
+        self.nodes: List[JoinNode] = list(nodes)
+        if not self.nodes:
+            raise ValueError("empty join")
+        self._by_alias = {n.alias: n for n in self.nodes}
+        if len(self._by_alias) != len(self.nodes):
+            raise ValueError(f"duplicate aliases in join {name!r}")
+        self._validate()
+
+    # -- structure ------------------------------------------------------------
+    @property
+    def root(self) -> JoinNode:
+        roots = [n for n in self.nodes if n.kind == "tree" and n.parent is None]
+        if len(roots) != 1:
+            raise ValueError(f"join {self.name!r} must have exactly one tree root")
+        return roots[0]
+
+    @property
+    def tree_nodes(self) -> List[JoinNode]:
+        return [n for n in self.nodes if n.kind == "tree"]
+
+    @property
+    def residual_nodes(self) -> List[JoinNode]:
+        return [n for n in self.nodes if n.kind == "residual"]
+
+    @property
+    def is_cyclic(self) -> bool:
+        return bool(self.residual_nodes)
+
+    @property
+    def is_chain(self) -> bool:
+        if self.is_cyclic:
+            return False
+        kids = self.children_map()
+        return all(len(kids.get(n.alias, [])) <= 1 for n in self.tree_nodes)
+
+    def node(self, alias: str) -> JoinNode:
+        return self._by_alias[alias]
+
+    def children_map(self) -> Dict[str, List[JoinNode]]:
+        out: Dict[str, List[JoinNode]] = {}
+        for n in self.tree_nodes:
+            if n.parent is not None:
+                out.setdefault(n.parent, []).append(n)
+        return out
+
+    @property
+    def output_attrs(self) -> List[str]:
+        seen: List[str] = []
+        for n in self.nodes:
+            for a in n.relation.attrs:
+                if a not in seen:
+                    seen.append(a)
+        return seen
+
+    def relations(self) -> List[Relation]:
+        return [n.relation for n in self.nodes]
+
+    # -- validation -----------------------------------------------------------
+    def _validate(self) -> None:
+        produced: set = set()
+        order = self._expansion_order()
+        for i, n in enumerate(order):
+            if i == 0:
+                if n.parent is not None or n.kind != "tree":
+                    raise ValueError("first node in expansion order must be the root")
+            else:
+                missing = [a for a in n.edge_attrs if a not in produced]
+                if missing:
+                    raise ValueError(
+                        f"join {self.name!r}: node {n.alias!r} edge attrs {missing} "
+                        f"not produced by earlier nodes"
+                    )
+                if not n.edge_attrs:
+                    raise ValueError(f"join {self.name!r}: node {n.alias!r} has no edge attrs")
+                if n.kind == "tree":
+                    parent_attrs = set(self._by_alias[n.parent].relation.attrs)
+                    bad = [a for a in n.edge_attrs if a not in parent_attrs]
+                    if bad:
+                        raise ValueError(
+                            f"join {self.name!r}: tree node {n.alias!r} edge attrs {bad} "
+                            f"missing from parent {n.parent!r}"
+                        )
+                missing_child = [a for a in n.edge_attrs if a not in n.relation.attrs]
+                if missing_child:
+                    raise ValueError(
+                        f"join {self.name!r}: node {n.alias!r} lacks its edge attrs {missing_child}"
+                    )
+            produced.update(n.relation.attrs)
+
+    def _expansion_order(self) -> List[JoinNode]:
+        """Root-first order: parents before children, residuals last."""
+        order: List[JoinNode] = []
+        remaining = {n.alias: n for n in self.tree_nodes}
+        roots = [n for n in self.tree_nodes if n.parent is None]
+        frontier = list(roots)
+        while frontier:
+            n = frontier.pop(0)
+            order.append(n)
+            remaining.pop(n.alias, None)
+            frontier.extend([c for c in self.tree_nodes if c.parent == n.alias])
+        if remaining:
+            raise ValueError(f"join {self.name!r}: disconnected tree nodes {list(remaining)}")
+        order.extend(self.residual_nodes)
+        return order
+
+    def expansion_order(self) -> List[JoinNode]:
+        return self._expansion_order()
+
+    def __repr__(self) -> str:  # pragma: no cover
+        parts = [f"{n.alias}({'root' if n.parent is None and n.kind=='tree' else ','.join(n.edge_attrs)})"
+                 for n in self.nodes]
+        return f"JoinSpec({self.name!r}: {' ⋈ '.join(parts)})"
+
+
+# ---------------------------------------------------------------------------
+# Constructors
+# ---------------------------------------------------------------------------
+
+
+def chain_join(name: str, relations: Sequence[Relation],
+               edge_attrs: Sequence[Sequence[str] | str]) -> JoinSpec:
+    """R1 ⋈_{e1} R2 ⋈_{e2} ... ⋈_{e_{m-1}} Rm."""
+    if len(edge_attrs) != len(relations) - 1:
+        raise ValueError("need len(relations)-1 edge attr sets")
+    nodes = [JoinNode(relations[0].name, relations[0], None, ())]
+    for i, rel in enumerate(relations[1:]):
+        ea = edge_attrs[i]
+        ea = (ea,) if isinstance(ea, str) else tuple(ea)
+        nodes.append(JoinNode(rel.name, rel, nodes[i].alias, ea))
+    return JoinSpec(name, nodes)
+
+
+def materialize_residual(cat: Catalog, relations: Sequence[Relation],
+                         edges: Sequence[Tuple[str, str, Sequence[str]]],
+                         name: str) -> Relation:
+    """Join the residual set S_R into a single relation (paper §8.2)."""
+    by_name = {r.name: r for r in relations}
+    first = relations[0]
+    inter: Dict[str, np.ndarray] = {a: c for a, c in first.columns.items()}
+    done = {first.name}
+    pending = list(edges)
+    while pending:
+        progressed = False
+        for e in list(pending):
+            a_name, b_name, attrs = e
+            nxt = None
+            if a_name in done and b_name not in done:
+                nxt = by_name[b_name]
+            elif b_name in done and a_name not in done:
+                nxt = by_name[a_name]
+            elif a_name in done and b_name in done:
+                pending.remove(e)
+                progressed = True
+                continue
+            if nxt is None:
+                continue
+            inter = _expand(cat, inter, nxt, tuple(attrs))
+            done.add(nxt.name)
+            pending.remove(e)
+            progressed = True
+        if not progressed:
+            raise ValueError("residual edges do not connect the residual relations")
+    return Relation(name, inter)
+
+
+# ---------------------------------------------------------------------------
+# FULLJOIN baseline
+# ---------------------------------------------------------------------------
+
+
+def _expand(cat: Catalog, inter: Dict[str, np.ndarray], child: Relation,
+            edge_attrs: Tuple[str, ...]) -> Dict[str, np.ndarray]:
+    """inter ⋈ child on edge_attrs, vectorised via the child's sorted index."""
+    idx = cat.index(child, list(edge_attrs))
+    n = next(iter(inter.values())).shape[0] if inter else 0
+    key = combine_columns([inter[a] for a in edge_attrs])
+    lo, hi = idx.ranges(key)
+    counts = hi - lo
+    total = int(counts.sum())
+    rep = np.repeat(np.arange(n), counts)
+    starts = np.zeros(n, dtype=np.int64)
+    np.cumsum(counts[:-1], out=starts[1:]) if n > 1 else None
+    within = np.arange(total, dtype=np.int64) - np.repeat(starts, counts)
+    pos = lo[rep] + within
+    child_rows = idx.row_ids_at(pos)
+    out = {a: c[rep] for a, c in inter.items()}
+    for a in child.attrs:
+        if a not in out:
+            out[a] = child.columns[a][child_rows]
+    return out
+
+
+def full_join(cat: Catalog, spec: JoinSpec) -> Dict[str, np.ndarray]:
+    """Materialise the join result (the expensive FULLJOIN baseline)."""
+    order = spec.expansion_order()
+    root = order[0]
+    inter: Dict[str, np.ndarray] = {a: c.copy() for a, c in root.relation.columns.items()}
+    for n in order[1:]:
+        inter = _expand(cat, inter, n.relation, n.edge_attrs)
+    return inter
+
+
+def full_join_matrix(cat: Catalog, spec: JoinSpec,
+                     attrs: Optional[Sequence[str]] = None) -> np.ndarray:
+    """(n, k) value matrix of the full join over ``attrs`` (default: output schema)."""
+    res = full_join(cat, spec)
+    attrs = list(attrs) if attrs is not None else spec.output_attrs
+    n = next(iter(res.values())).shape[0] if res else 0
+    if n == 0:
+        return np.zeros((0, len(attrs)), dtype=np.int64)
+    return np.stack([res[a] for a in attrs], axis=1)
+
+
+def join_size(cat: Catalog, spec: JoinSpec) -> int:
+    """|J| without materialising attribute payloads (counts only)."""
+    order = spec.expansion_order()
+    root = order[0]
+    inter: Dict[str, np.ndarray] = {a: c for a, c in root.relation.columns.items()}
+    count_weight = np.ones(root.relation.nrows, dtype=np.int64)
+    # expansion keeping only attrs still needed as edge keys downstream
+    needed: set = set()
+    for n in order[1:]:
+        needed.update(n.edge_attrs)
+    for i, n in enumerate(order[1:], start=1):
+        idx = cat.index(n.relation, list(n.edge_attrs))
+        key = combine_columns([inter[a] for a in n.edge_attrs])
+        lo, hi = idx.ranges(key)
+        counts = hi - lo
+        keep = counts > 0
+        # degrees multiply; but downstream edges may key on this child's attrs,
+        # so we must expand when the child introduces needed attrs.
+        later_needed = set()
+        for m in order[i + 1:]:
+            later_needed.update(m.edge_attrs)
+        new_attrs = [a for a in n.relation.attrs if a not in inter]
+        if any(a in later_needed for a in new_attrs):
+            inter2 = _expand(cat, {a: c for a, c in inter.items()}, n.relation, n.edge_attrs)
+            # recompute weight: expansion already multiplies rows
+            count_weight = np.repeat(count_weight, counts)
+            inter = inter2
+        else:
+            count_weight = count_weight[keep] * counts[keep]
+            inter = {a: c[keep] for a, c in inter.items()}
+    return int(count_weight.sum())

@@ -1,0 +1,82 @@
+"""Batched membership probes: is output tuple ``t`` in join ``J``?
+
+Because every join keeps its full concatenated output schema (no projection —
+the paper's same-output-schema assumption), a tuple belongs to a join iff each
+base relation of the join contains the tuple's projection onto that relation's
+attributes, AND (for tree joins, which follow the running-intersection
+property) those projections connect — which the shared join attributes enforce
+automatically since they appear once in the output.
+
+So the probe is: for each relation of ``J``, one :class:`RowSetIndex` lookup of
+the projected sub-tuple; AND-reduce across relations.  Fully batched: probing
+B tuples against a join of m relations costs m sorted searches of B queries —
+the access pattern the `searchsorted` Pallas kernel tiles.
+
+Tuple identity (set-union semantics) uses the 128-bit fingerprint of the
+output-schema values (host-side dictionaries only; probes compare values).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from .index import Catalog
+from .joins import JoinSpec
+from .relation import fingerprint128
+
+
+class MembershipProber:
+    """Caches per-relation row-set indexes for a set of joins."""
+
+    def __init__(self, cat: Catalog, joins: Sequence[JoinSpec]):
+        self.cat = cat
+        self.joins = {j.name: j for j in joins}
+        self._schema_check(joins)
+
+    def _schema_check(self, joins: Sequence[JoinSpec]) -> None:
+        schemas = [tuple(sorted(j.output_attrs)) for j in joins]
+        if len(set(schemas)) > 1:
+            raise ValueError(
+                f"joins must share an output schema; got {sorted(set(schemas))}"
+            )
+        self.output_attrs: List[str] = list(joins[0].output_attrs)
+
+    # -- probes ---------------------------------------------------------------
+    def contains(self, join_name: str, rows: Dict[str, np.ndarray]) -> np.ndarray:
+        """Vector of booleans: does ``join_name`` contain each tuple of ``rows``?"""
+        spec = self.joins[join_name]
+        n = next(iter(rows.values())).shape[0]
+        ok = np.ones(n, dtype=bool)
+        for node in spec.nodes:
+            attrs = node.relation.attrs
+            rs = self.cat.rowset(node.relation, attrs)
+            ok &= rs.contains_rows(rows)
+            if not ok.any():
+                break
+        return ok
+
+    def membership_matrix(self, rows: Dict[str, np.ndarray],
+                          join_names: Sequence[str] | None = None) -> np.ndarray:
+        """(n_tuples, n_joins) boolean membership matrix."""
+        names = list(join_names) if join_names is not None else list(self.joins)
+        cols = [self.contains(name, rows) for name in names]
+        return np.stack(cols, axis=1)
+
+    def fingerprints(self, rows: Dict[str, np.ndarray]) -> np.ndarray:
+        """(n, 2) uint64 tuple-value fingerprints in output-schema order."""
+        return fingerprint128([np.asarray(rows[a]) for a in self.output_attrs])
+
+
+def rows_subset(rows: Dict[str, np.ndarray], idx: np.ndarray) -> Dict[str, np.ndarray]:
+    return {a: c[idx] for a, c in rows.items()}
+
+
+def rows_concat(parts: Sequence[Dict[str, np.ndarray]]) -> Dict[str, np.ndarray]:
+    keys = list(parts[0].keys())
+    return {a: np.concatenate([p[a] for p in parts]) for a in keys}
+
+
+def rows_length(rows: Dict[str, np.ndarray]) -> int:
+    return next(iter(rows.values())).shape[0] if rows else 0

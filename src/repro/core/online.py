@@ -1,0 +1,245 @@
+"""§7: ONLINE-UNION sampling (Algorithm 2) — reuse + backtracking.
+
+Initialises cheaply with the HISTOGRAM-BASED parameters, then refines join /
+overlap / union estimates on the fly with RANDOM-WALK batches while sampling.
+
+* **Sample reuse** (Alg 2 lines 8-10): walk tuples collected during warm-up
+  carry exact probabilities ``p(t)``.  When join ``J_j`` is selected and its
+  pool is non-empty, draw a pooled tuple uniformly and accept with
+  ``R = l / (p(t)·|J_j|)`` (``l`` = current pool size, sampling *without*
+  replacement) — acceptance makes the reused tuple a ``1/|J_j|`` uniform draw.
+  ``R > 1`` is handled as ``⌊R⌋`` copies plus a Bernoulli(frac) extra copy
+  (the paper's multi-instance system ``Σ r_i·i = R``).
+* **Backtracking with parameter update** (Alg 2 lines 18-20): every ``φ``
+  recorded candidate probabilities, parameters are re-estimated from the
+  accumulated walks and previously accepted samples are thinned with
+  probability proportional to the new-to-old selection-ratio
+  ``(|J'_h|'/|U|') / (|J'_h|/|U|)`` (normalised by its maximum so retention is
+  maximal) — the retained output is uniform under the refined parameters.
+  Backtracking stops once the estimate confidence reaches ``γ``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .cover import Cover, build_cover
+from .framework import estimate_union, warmup
+from .index import Catalog
+from .joins import JoinSpec
+from .join_sampler import JoinSampler
+from .koverlap import OverlapOracle
+from .membership import MembershipProber, rows_subset
+from .overlap import RandomWalkOverlap
+from .relation import fingerprint128
+from .union_sampler import SampleSet, SamplerStats
+
+Rows = Dict[str, np.ndarray]
+
+
+@dataclasses.dataclass
+class _Accepted:
+    values: Dict[str, int]
+    home: int
+    sel_ratio: float    # |J'_h|/|U| under the parameters at acceptance time
+
+
+class OnlineUnionSampler:
+    """Algorithm 2: histogram init + random-walk refinement + reuse + backtrack."""
+
+    def __init__(self, cat: Catalog, joins: Sequence[JoinSpec], seed: int = 0,
+                 phi: int = 2048, gamma: float = 0.90,
+                 target_rel_halfwidth: float = 0.15,
+                 join_method: str = "ew", rw_batch: int = 256,
+                 order: Optional[Sequence[str]] = None,
+                 warm_rounds: int = 2):
+        self.cat = cat
+        self.joins = list(joins)
+        self.names = [j.name for j in self.joins]
+        self.prober = MembershipProber(cat, self.joins)
+        self.attrs = list(self.joins[0].output_attrs)
+        self.rng = np.random.default_rng(seed)
+        self.phi = phi
+        self.gamma = gamma
+        self.target_rel_halfwidth = target_rel_halfwidth
+        self.stats = SamplerStats()
+
+        # (1) cheap init: HISTOGRAM-BASED parameters
+        wr = warmup(cat, self.joins, method="histogram")
+        est = estimate_union(wr.oracle, order)
+        self.cover: Cover = est.cover
+        self.order = list(self.cover.order)
+
+        # (2) random-walk refinement machinery (+ its pool feeds reuse)
+        self.rw = RandomWalkOverlap(cat, self.joins, seed=seed + 1, batch=rw_batch)
+        for j in self.joins:            # tiny warm start so sizes exist
+            for _ in range(warm_rounds):
+                self.rw.observe([j], rounds=1)
+        self._refresh_pools()
+
+        self.samplers = {j.name: JoinSampler(cat, j, method=join_method)
+                         for j in self.joins}
+        self._accepted: List[_Accepted] = []
+        self._since_refresh = 0
+        self._confident = False
+
+    # ------------------------------------------------------------------ pools
+    def _refresh_pools(self) -> None:
+        """Flatten rw.walk_pool batches into per-join candidate lists."""
+        self.pools: Dict[str, List[Tuple[Dict[str, int], float]]] = {}
+        for name, batches in self.rw.walk_pool.items():
+            entries: List[Tuple[Dict[str, int], float]] = []
+            for rows, prob in batches:
+                ok = prob > 0
+                idx = np.nonzero(ok)[0]
+                for i in idx:
+                    entries.append(({a: int(rows[a][i]) for a in self.attrs},
+                                    float(prob[i])))
+            self.pools[name] = entries
+        self.rw.walk_pool = {}
+
+    # ------------------------------------------------------------- parameters
+    def _sel_ratio(self, oidx: int) -> float:
+        u = max(self.cover.union_size, 1e-12)
+        return self.cover.piece_sizes[self.order[oidx]] / u
+
+    def _selection_probs(self) -> np.ndarray:
+        p = np.array([max(self.cover.piece_sizes[n], 0.0) for n in self.order])
+        s = p.sum()
+        return p / s if s > 0 else np.full(len(p), 1.0 / len(p))
+
+    def _join_size_est(self, name: str) -> float:
+        st = self.rw._size_stats.get(name)
+        if st is not None and st.count > 0 and st.mean > 0:
+            return st.mean
+        return max(self.cover.join_sizes[name], 1.0)
+
+    def _refresh_parameters(self) -> None:
+        """Re-estimate sizes/overlaps from walks; rebuild cover; backtrack."""
+        old_ratio = {i: self._sel_ratio(i) for i in range(len(self.order))}
+        # add fresh walk rounds for every pair (budgeted)
+        import itertools
+        for a, b in itertools.combinations(self.joins, 2):
+            self.rw.observe([a, b], rounds=1)
+        if len(self.joins) > 2:
+            self.rw.observe(self.joins, rounds=1)
+        self._refresh_pools()
+        oracle = OverlapOracle(
+            lambda d: self.rw._stats[frozenset(j.name for j in d)].mean
+            if frozenset(j.name for j in d) in self.rw._stats else 0.0,
+            lambda j: self._join_size_est(j.name), self.joins)
+        self.cover = build_cover(oracle, self.order)
+        # ---- backtracking ----
+        new_ratio = {i: self._sel_ratio(i) for i in range(len(self.order))}
+        r = {i: (new_ratio[i] / old_ratio[i]) if old_ratio[i] > 0 else 1.0
+             for i in range(len(self.order))}
+        rmax = max(r.values()) if r else 1.0
+        if rmax <= 0:
+            return
+        kept: List[_Accepted] = []
+        for s in self._accepted:
+            cur = self.cover.piece_sizes[self.order[s.home]] / max(self.cover.union_size, 1e-12)
+            ratio = (cur / s.sel_ratio) if s.sel_ratio > 0 else 1.0
+            q = min(ratio / rmax, 1.0)
+            if self.rng.random() < q:
+                s.sel_ratio = cur
+                kept.append(s)
+            else:
+                self.stats.backtrack_removed += 1
+        self._accepted = kept
+        # confidence check (γ): all pairwise overlap CIs tight enough?
+        hw_ok = True
+        for key, st in self.rw._stats.items():
+            if len(key) < 2 or st.count < 8:
+                continue
+            if st.mean > 0 and st.half_width(self.gamma) > self.target_rel_halfwidth * st.mean:
+                hw_ok = False
+        self._confident = hw_ok
+
+    # ---------------------------------------------------------------- accept
+    def _cover_accept(self, oidx: int, rows: Rows) -> np.ndarray:
+        n = next(iter(rows.values())).shape[0]
+        keep = np.ones(n, dtype=bool)
+        for i in range(oidx):
+            if not keep.any():
+                break
+            keep &= ~self.prober.contains(self.order[i], rows)
+        return keep
+
+    def _try_reuse(self, name: str, oidx: int) -> List[_Accepted]:
+        """One reuse attempt (Alg 2 line 8). Returns accepted copies (may be >1)."""
+        pool = self.pools.get(name, [])
+        if not pool:
+            return []
+        l = len(pool)
+        k = int(self.rng.integers(0, l))
+        values, p = pool.pop(k)
+        jsize = self._join_size_est(name)
+        # Acceptance R = 1/(p(t)·|J_j|): each pool entry is an independent walk
+        # outcome, so P(emit t) = p(t)·R = 1/|J_j|.  (The paper's printed
+        # formula carries an extra factor l that double-counts the uniform
+        # pick among l entries — see DESIGN.md §7.)  R>1 is handled as the
+        # paper prescribes: ⌊R⌋ copies + Bernoulli(frac).
+        R = 1.0 / max(p * jsize, 1e-300)
+        copies = int(np.floor(R)) + (1 if self.rng.random() < (R - np.floor(R)) else 0)
+        if copies == 0:
+            self.stats.reuse_rejects += 1
+            return []
+        rows = {a: np.asarray([values[a]], dtype=np.int64) for a in self.attrs}
+        if not bool(self._cover_accept(oidx, rows)[0]):
+            self.stats.cover_rejects += 1
+            return []
+        self.stats.reuse_accepts += copies
+        ratio = self._sel_ratio(oidx)
+        return [_Accepted(dict(values), oidx, ratio) for _ in range(copies)]
+
+    # ---------------------------------------------------------------- sample
+    def sample(self, n: int, retry_rounds: int = 64) -> SampleSet:
+        guard = 0
+        max_guard = max(500 * n, 20_000)
+        while len(self._accepted) < n:
+            guard += 1
+            if guard > max_guard:
+                raise RuntimeError("OnlineUnionSampler budget exhausted")
+            probs = self._selection_probs()
+            oidx = int(self.rng.choice(len(self.order), p=probs))
+            name = self.order[oidx]
+            got = self._try_reuse(name, oidx)
+            if got:
+                self._accepted.extend(got)
+                self._since_refresh += 1
+            else:
+                # fresh uniform sampling with retry-within-join
+                accepted = None
+                from .join_sampler import EmptyJoinError
+                for _ in range(retry_rounds):
+                    try:
+                        rows, draws = self.samplers[name].sample_uniform(
+                            self.rng, 1, batch=32)
+                    except EmptyJoinError:
+                        break
+                    self.stats.candidate_draws += draws
+                    self._since_refresh += 1
+                    if bool(self._cover_accept(oidx, rows)[0]):
+                        accepted = rows
+                        break
+                    self.stats.cover_rejects += 1
+                if accepted is not None:
+                    self._accepted.append(_Accepted(
+                        {a: int(accepted[a][0]) for a in self.attrs},
+                        oidx, self._sel_ratio(oidx)))
+                else:
+                    self.stats.dropped_slots += 1
+            self.stats.iterations += 1
+            if (not self._confident) and self._since_refresh >= self.phi:
+                self._since_refresh = 0
+                self._refresh_parameters()
+        acc = self._accepted[:n]
+        rows = {a: np.asarray([s.values[a] for s in acc], dtype=np.int64)
+                for a in self.attrs}
+        home = np.asarray([s.home for s in acc], dtype=np.int64)
+        fp = fingerprint128([rows[a] for a in sorted(self.attrs)])
+        return SampleSet(self.attrs, rows, home, fp, self.stats)

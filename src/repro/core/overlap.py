@@ -1,0 +1,276 @@
+"""Overlap-size estimation |O_Δ| for a set Δ of joins.
+
+Three instantiations, mirroring the paper:
+
+* :func:`exact_overlap`       — materialise the joins and intersect distinct
+  tuple sets (the FULLJOIN ground truth of §9; exponential-cost baseline).
+* :class:`HistogramOverlap`   — §5 / Theorem 4: degree-statistics upper bound
+  over template-split chains.  Needs only per-column histograms — the
+  *decentralised* (data-market) setting.
+* :class:`RandomWalkOverlap`  — §6.2 / Eq. 2: wander-join walks from a pivot
+  join, probed for membership in the other joins of Δ.  The estimator is the
+  Horvitz–Thompson mean of ``indicator / p(t)`` which is *unbiased* for
+  ``|O_Δ|`` (the paper's ``|J_j| · |∩ S'| / |S'_j|`` with the HT size folded
+  in), with the delta-method CI the paper derives in Eq. 3.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, FrozenSet, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .index import Catalog
+from .joins import JoinSpec, full_join_matrix
+from .join_sampler import JoinSampler
+from .membership import MembershipProber
+from .size_estimation import RunningMean, z_value
+from .splitting import SplitPlan, split_plans
+
+
+# ---------------------------------------------------------------------------
+# Exact (FULLJOIN baseline)
+# ---------------------------------------------------------------------------
+
+
+def _row_view(mat: np.ndarray) -> np.ndarray:
+    """View an (n,k) int64 matrix as an (n,) structured array for set ops."""
+    mat = np.ascontiguousarray(mat)
+    return mat.view([("", mat.dtype)] * mat.shape[1]).ravel()
+
+
+def distinct_tuples(mat: np.ndarray) -> np.ndarray:
+    return np.unique(_row_view(mat))
+
+
+def exact_overlap(cat: Catalog, joins: Sequence[JoinSpec],
+                  attrs: Optional[Sequence[str]] = None) -> int:
+    """|∩_{J in joins} J| over distinct output tuples (expensive baseline)."""
+    attrs = list(attrs) if attrs is not None else sorted(joins[0].output_attrs)
+    sets = [distinct_tuples(full_join_matrix(cat, j, attrs)) for j in joins]
+    cur = sets[0]
+    for s in sets[1:]:
+        cur = np.intersect1d(cur, s, assume_unique=True)
+        if cur.shape[0] == 0:
+            break
+    return int(cur.shape[0])
+
+
+def exact_union_size(cat: Catalog, joins: Sequence[JoinSpec],
+                     attrs: Optional[Sequence[str]] = None) -> int:
+    attrs = list(attrs) if attrs is not None else sorted(joins[0].output_attrs)
+    sets = [distinct_tuples(full_join_matrix(cat, j, attrs)) for j in joins]
+    cur = sets[0]
+    for s in sets[1:]:
+        cur = np.union1d(cur, s)
+    return int(cur.shape[0])
+
+
+def exact_join_size_distinct(cat: Catalog, join: JoinSpec,
+                             attrs: Optional[Sequence[str]] = None) -> int:
+    attrs = list(attrs) if attrs is not None else sorted(join.output_attrs)
+    return int(distinct_tuples(full_join_matrix(cat, join, attrs)).shape[0])
+
+
+# ---------------------------------------------------------------------------
+# HISTOGRAM-BASED (Theorem 4 over split chains)
+# ---------------------------------------------------------------------------
+
+
+class HistogramOverlap:
+    """Degree-statistics upper bound on |O_Δ| (decentralised setting)."""
+
+    def __init__(self, cat: Catalog, joins: Sequence[JoinSpec],
+                 template: Optional[Sequence[str]] = None,
+                 mode: str = "max", cap_with_join_bound: bool = True):
+        if mode not in ("max", "avg"):
+            raise ValueError("mode must be 'max' (bound) or 'avg' (refined estimate)")
+        self.cat = cat
+        self.joins = list(joins)
+        self.mode = mode
+        self.cap = cap_with_join_bound
+        self.plans: Dict[str, SplitPlan] = {
+            p.join.name: p for p in split_plans(joins, template)
+        }
+        self.template = next(iter(self.plans.values())).template
+        from .size_estimation import olken_bound
+        self._join_bounds = {j.name: olken_bound(cat, j) for j in joins}
+
+    # -- per-join, per-pair statistics ---------------------------------------
+    def _pair_degree_hist(self, plan: SplitPlan, i: int, attr: str
+                          ) -> Tuple[np.ndarray, np.ndarray]:
+        """Exact per-value histogram of ``attr`` in pair i's source relation."""
+        pair = plan.pairs[i]
+        if pair.source_alias is not None:
+            rel = plan.join.node(pair.source_alias).relation
+        else:
+            # fallback: use the first relation on the path holding the attr
+            alias = next(a for a in pair.path_aliases
+                         if attr in plan.join.node(a).relation.attrs)
+            rel = plan.join.node(alias).relation
+        st = self.cat.stats(rel, [attr])
+        return st.hist_values, st.hist_counts
+
+    def _pair_multiplier(self, plan: SplitPlan, i: int) -> float:
+        """M_{j,i}: multiplier for extending through pair i (Theorem 4)."""
+        pair = plan.pairs[i]
+        lead = pair.attrs[0]
+        if pair.source_alias is not None:
+            if pair.fake_edge_to_prev:
+                return 1.0  # fake join — row identity continues
+            rel = plan.join.node(pair.source_alias).relation
+            st = self.cat.stats(rel, [lead])
+            return float(st.max_degree if self.mode == "max" else max(st.avg_degree, 1e-12))
+        # path fallback: product of per-hop degrees along the connecting path
+        m = 1.0
+        for alias in pair.path_aliases:
+            rel = plan.join.node(alias).relation
+            held = [a for a in pair.attrs if a in rel.attrs]
+            st = self.cat.stats(rel, [held[0] if held else rel.attrs[0]])
+            m *= float(st.max_degree if self.mode == "max" else max(st.avg_degree, 1e-12))
+        return m
+
+    def estimate(self, delta: Sequence[JoinSpec]) -> float:
+        """Upper bound (mode='max') or refined estimate (mode='avg') of |O_Δ|."""
+        delta = list(delta)
+        if len(delta) == 1:
+            only = delta[0]
+            val = self._join_bounds[only.name]
+            return float(val)
+        plans = [self.plans[j.name] for j in delta]
+        k = len(self.template) - 1  # number of pairs
+
+        # K(1): value-level min over joins on the first edge's shared attr.
+        # First edge connects pair 0 and pair 1 on template[1].
+        first_attr = self.template[1]
+        per_join_value_counts: List[Tuple[np.ndarray, np.ndarray]] = []
+        for plan in plans:
+            v0, c0 = self._pair_degree_hist(plan, 0, first_attr)
+            if k >= 2:
+                p1 = plan.pairs[1]
+                if p1.fake_edge_to_prev:
+                    # row identity: pairs with A2=v == d(v) rows
+                    per_join_value_counts.append((v0, c0.astype(np.float64)))
+                    continue
+                v1, c1 = self._pair_degree_hist(plan, 1, first_attr)
+                common, i0, i1 = np.intersect1d(v0, v1, assume_unique=True,
+                                                return_indices=True)
+                per_join_value_counts.append(
+                    (common, c0[i0].astype(np.float64) * c1[i1].astype(np.float64)))
+            else:
+                per_join_value_counts.append((v0, c0.astype(np.float64)))
+
+        # intersect the value domains across joins and take the min count
+        vals = per_join_value_counts[0][0]
+        for v, _ in per_join_value_counts[1:]:
+            vals = np.intersect1d(vals, v, assume_unique=True)
+        if vals.shape[0] == 0:
+            return 0.0
+        kacc = np.full(vals.shape[0], np.inf)
+        for v, c in per_join_value_counts:
+            pos = np.searchsorted(v, vals)
+            kacc = np.minimum(kacc, c[pos])
+        k1 = float(kacc.sum())
+
+        # K(i) for the remaining pairs: multiply by min over joins of M_{j,i}
+        bound = k1
+        for i in range(2, k):
+            bound *= min(self._pair_multiplier(plan, i) for plan in plans)
+        if self.cap:
+            bound = min(bound, min(self._join_bounds[j.name] for j in delta))
+        return float(bound)
+
+    def join_size_bound(self, join: JoinSpec) -> float:
+        return float(self._join_bounds[join.name])
+
+
+# ---------------------------------------------------------------------------
+# RANDOM-WALK (Eq. 2 + Eq. 3)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class OverlapEstimate:
+    value: float
+    half_width: float
+    walks: int
+
+
+class RandomWalkOverlap:
+    """Unbiased overlap estimation from wander-join walks + membership probes."""
+
+    def __init__(self, cat: Catalog, joins: Sequence[JoinSpec], seed: int = 0,
+                 batch: int = 512):
+        self.cat = cat
+        self.joins = list(joins)
+        self.by_name = {j.name: j for j in self.joins}
+        self.prober = MembershipProber(cat, self.joins)
+        self.batch = batch
+        self._samplers: Dict[str, JoinSampler] = {}
+        self._rng = np.random.default_rng(seed)
+        # per-Δ running statistics: HT mean of indicator/p (=|O|) and of 1/p (=|J|)
+        self._stats: Dict[FrozenSet[str], RunningMean] = {}
+        self._size_stats: Dict[str, RunningMean] = {}
+        # reuse pool: walk tuples + probabilities per join (feeds ONLINE-UNION §7)
+        self.walk_pool: Dict[str, List[Tuple[Dict[str, np.ndarray], np.ndarray]]] = {}
+
+    def sampler(self, name: str) -> JoinSampler:
+        if name not in self._samplers:
+            self._samplers[name] = JoinSampler(self.cat, self.by_name[name], method="wj")
+        return self._samplers[name]
+
+    def _pivot(self, delta: Sequence[JoinSpec]) -> JoinSpec:
+        # pivot = join with the smallest Olken bound (lowest-variance walks)
+        from .size_estimation import olken_bound
+        return min(delta, key=lambda j: olken_bound(self.cat, j))
+
+    def observe(self, delta: Sequence[JoinSpec], rounds: int = 1) -> OverlapEstimate:
+        """Run ``rounds`` batches of walks on the pivot and update estimates."""
+        delta = list(delta)
+        key = frozenset(j.name for j in delta)
+        stat = self._stats.setdefault(key, RunningMean())
+        pivot = self._pivot(delta)
+        others = [j for j in delta if j.name != pivot.name]
+        smp = self.sampler(pivot.name)
+        for _ in range(rounds):
+            sb = smp.sample_batch(self._rng, self.batch)
+            inv = np.where(sb.ok & (sb.prob > 0), 1.0 / np.maximum(sb.prob, 1e-300), 0.0)
+            self._size_stats.setdefault(pivot.name, RunningMean()).update_batch(inv)
+            ind = sb.ok.copy()
+            if others and ind.any():
+                member = np.ones(self.batch, dtype=bool)
+                for j in others:
+                    member &= self.prober.contains(j.name, sb.rows)
+                ind &= member
+            stat.update_batch(np.where(ind, inv, 0.0))
+            self.walk_pool.setdefault(pivot.name, []).append((sb.rows, sb.prob))
+        return OverlapEstimate(stat.mean, stat.half_width(0.90), stat.count)
+
+    def estimate(self, delta: Sequence[JoinSpec], confidence: float = 0.90,
+                 rel_halfwidth: float = 0.25, max_walks: int = 50_000,
+                 min_walks: int = 512) -> OverlapEstimate:
+        """Walk until the CI is tight (or budget exhausted); Eq. 2 estimate."""
+        delta = list(delta)
+        key = frozenset(j.name for j in delta)
+        while True:
+            est = self.observe(delta, rounds=1)
+            stat = self._stats[key]
+            if stat.count >= min_walks:
+                hw = stat.half_width(confidence)
+                if est.value <= 0 and stat.count >= min_walks * 4:
+                    break  # looks empty
+                if est.value > 0 and hw <= rel_halfwidth * est.value:
+                    break
+            if stat.count >= max_walks:
+                break
+        stat = self._stats[key]
+        return OverlapEstimate(max(stat.mean, 0.0), stat.half_width(confidence), stat.count)
+
+    def join_size(self, join: JoinSpec, min_walks: int = 512) -> float:
+        """HT size of one join (walked as a Δ of size 1)."""
+        st = self._size_stats.get(join.name)
+        while st is None or st.count < min_walks:
+            self.observe([join], rounds=1)
+            st = self._size_stats[join.name]
+        return max(st.mean, 0.0)

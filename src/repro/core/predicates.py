@@ -1,0 +1,75 @@
+"""§8.3: selection predicates — pushdown and rejection modes.
+
+* ``pushdown(cat, spec, preds)`` filters base relations during preprocessing
+  and returns a new :class:`JoinSpec` over the filtered relations (works for
+  both HISTOGRAM-BASED and RANDOM-WALK instantiations).
+* ``RejectingPredicate`` wraps a sampler-side filter: samples failing the
+  predicate are rejected during sampling (random-walk-compatible mode; adds a
+  rejection factor — appropriate for non-selective predicates, as the paper
+  notes).
+
+Predicates are simple column comparisons on the dict-encoded domain:
+``Pred(attr, op, value)`` with op in {==, !=, <, <=, >, >=, in}.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Sequence
+
+import numpy as np
+
+from .index import Catalog
+from .joins import JoinNode, JoinSpec
+from .relation import Relation
+
+_OPS: Dict[str, Callable[[np.ndarray, object], np.ndarray]] = {
+    "==": lambda c, v: c == v,
+    "!=": lambda c, v: c != v,
+    "<": lambda c, v: c < v,
+    "<=": lambda c, v: c <= v,
+    ">": lambda c, v: c > v,
+    ">=": lambda c, v: c >= v,
+    "in": lambda c, v: np.isin(c, np.asarray(list(v))),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Pred:
+    attr: str
+    op: str
+    value: object
+
+    def mask(self, cols: Dict[str, np.ndarray]) -> np.ndarray:
+        return _OPS[self.op](np.asarray(cols[self.attr]), self.value)
+
+
+def pushdown(spec: JoinSpec, preds: Sequence[Pred],
+             name_suffix: str = "#sel") -> JoinSpec:
+    """Filter each base relation by the predicates touching its attributes."""
+    nodes: List[JoinNode] = []
+    for n in spec.nodes:
+        rel = n.relation
+        mask = np.ones(rel.nrows, dtype=bool)
+        touched = False
+        for p in preds:
+            if p.attr in rel.attrs:
+                mask &= p.mask(rel.columns)
+                touched = True
+        new_rel = rel.filter(mask, name=rel.name + name_suffix) if touched else rel
+        nodes.append(JoinNode(n.alias, new_rel, n.parent, n.edge_attrs, n.kind))
+    return JoinSpec(spec.name + name_suffix, nodes)
+
+
+class RejectingPredicate:
+    """Sampler-side predicate: rejection factor = selectivity (§8.3 mode 2)."""
+
+    def __init__(self, preds: Sequence[Pred]):
+        self.preds = list(preds)
+
+    def accept(self, rows: Dict[str, np.ndarray]) -> np.ndarray:
+        n = next(iter(rows.values())).shape[0]
+        keep = np.ones(n, dtype=bool)
+        for p in self.preds:
+            keep &= p.mask(rows)
+        return keep

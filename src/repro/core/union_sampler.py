@@ -1,0 +1,355 @@
+"""§3: the union sampling framework (Algorithm 1 + baselines).
+
+* :class:`DisjointUnionSampler` — Definition 1: pick ``J_j ∝ |J_j|``, sample
+  uniformly inside, emit.  No rejection.
+* :class:`BernoulliUnionSampler` — the §3 "union trick": per iteration each
+  join fires independently with ``P = |J_j|/|U|``; a fired join's sample is
+  kept only when the join is the *canonical first* join containing the tuple.
+  Uniform with only ``|J_j|`` statistics, but rejection grows with overlap.
+* :class:`SetUnionSampler` — Algorithm 1 (non-Bernoulli cover selection).
+  Joins are selected with ``P = |J'_j|/|U|`` from a :class:`Cover`; inside the
+  selected join we draw until the candidate lands in the cover piece
+  ``J'_j`` — per Theorem 1's proof the yield of every iteration is then
+  exactly ``P(f(u)) · 1/|g(f(u))| = 1/|U|``.  (The paper's pseudocode as
+  printed re-selects a join after a rejection, which does *not* reproduce the
+  proof's distribution — see DESIGN.md §7; ``strict_paper_loop=True``
+  reproduces the printed behaviour for the ablation benchmark.)
+
+  Two cover-membership modes:
+
+  - ``membership="probe"``  — exact batched membership probes against the
+    earlier joins (the centralised setting; zero revisions, exactly uniform).
+  - ``membership="record"`` — the paper's lazy ``orig_join`` record with
+    **revision**: a tuple's home join is discovered over time; when a tuple
+    recorded at join ``i`` is re-sampled from an earlier join ``j < i``, the
+    old copies are removed from the output and the record moves to ``j``
+    (Alg 1 lines 10–12).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .cover import Cover
+from .index import Catalog
+from .join_sampler import JoinSampler
+from .joins import JoinSpec
+from .membership import MembershipProber, rows_subset
+
+Rows = Dict[str, np.ndarray]
+
+
+@dataclasses.dataclass
+class SamplerStats:
+    iterations: int = 0
+    candidate_draws: int = 0       # ψ of §3.3 (samples obtained from join subroutine)
+    cover_rejects: int = 0
+    canonical_rejects: int = 0
+    revisions: int = 0
+    dropped_slots: int = 0
+    reuse_accepts: int = 0
+    reuse_rejects: int = 0
+    backtrack_removed: int = 0
+
+    def as_dict(self) -> Dict[str, int]:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class SampleSet:
+    """N accepted samples (with-replacement) from the set union."""
+
+    attrs: List[str]
+    rows: Rows                      # each (N,)
+    home: np.ndarray                # (N,) index of the join the sample credits
+    fingerprint: np.ndarray         # (N, 2) uint64
+    stats: SamplerStats
+
+    def __len__(self) -> int:
+        return int(self.home.shape[0])
+
+    def matrix(self) -> np.ndarray:
+        return np.stack([self.rows[a] for a in self.attrs], axis=1)
+
+
+def _fp_to_int(fp_row: np.ndarray) -> int:
+    return (int(fp_row[0]) << 64) | int(fp_row[1])
+
+
+class DisjointUnionSampler:
+    """Definition 1 — sampling the disjoint union ⨄ J_j."""
+
+    def __init__(self, cat: Catalog, joins: Sequence[JoinSpec],
+                 join_sizes: Dict[str, float], join_method: str = "ew",
+                 seed: int = 0):
+        self.joins = list(joins)
+        self.samplers = [JoinSampler(cat, j, method=join_method) for j in self.joins]
+        sizes = np.array([max(join_sizes[j.name], 0.0) for j in self.joins])
+        self.probs = sizes / sizes.sum()
+        self.rng = np.random.default_rng(seed)
+        self.attrs = list(self.joins[0].output_attrs)
+        self.stats = SamplerStats()
+
+    def sample(self, n: int) -> SampleSet:
+        picks = self.rng.choice(len(self.joins), size=n, p=self.probs)
+        parts: List[Rows] = []
+        homes: List[np.ndarray] = []
+        for j in range(len(self.joins)):
+            c = int((picks == j).sum())
+            if c == 0:
+                continue
+            rows, draws = self.samplers[j].sample_uniform(self.rng, c)
+            self.stats.candidate_draws += draws
+            parts.append(rows)
+            homes.append(np.full(c, j, dtype=np.int64))
+        rows = {a: np.concatenate([p[a] for p in parts]) for a in self.attrs}
+        home = np.concatenate(homes)
+        perm = self.rng.permutation(n)
+        rows = {a: c[perm] for a, c in rows.items()}
+        from .relation import fingerprint128
+        fp = fingerprint128([rows[a] for a in sorted(self.attrs)])
+        self.stats.iterations += n
+        return SampleSet(self.attrs, rows, home[perm], fp, self.stats)
+
+
+class BernoulliUnionSampler:
+    """§3 union-trick baseline (canonical first-join acceptance)."""
+
+    def __init__(self, cat: Catalog, joins: Sequence[JoinSpec],
+                 join_sizes: Dict[str, float], union_size: float,
+                 join_method: str = "ew", seed: int = 0):
+        self.cat = cat
+        self.joins = list(joins)
+        self.samplers = [JoinSampler(cat, j, method=join_method) for j in self.joins]
+        self.prober = MembershipProber(cat, self.joins)
+        self.sizes = np.array([max(join_sizes[j.name], 1e-12) for j in self.joins])
+        self.union_size = max(union_size, self.sizes.max())
+        self.rng = np.random.default_rng(seed)
+        self.attrs = list(self.joins[0].output_attrs)
+        self.stats = SamplerStats()
+
+    def sample(self, n: int, round_size: int = 256, max_rounds: int = 100_000) -> SampleSet:
+        acc_rows: List[Rows] = []
+        acc_home: List[int] = []
+        names = [j.name for j in self.joins]
+        p_fire = np.minimum(self.sizes / self.union_size, 1.0)
+        count = 0
+        for _ in range(max_rounds):
+            if count >= n:
+                break
+            self.stats.iterations += round_size
+            # Bernoulli fire matrix (round, joins)
+            fires = self.rng.random((round_size, len(self.joins))) < p_fire[None, :]
+            for j, name in enumerate(names):
+                c = int(fires[:, j].sum())
+                if c == 0:
+                    continue
+                rows, draws = self.samplers[j].sample_uniform(self.rng, c)
+                self.stats.candidate_draws += draws
+                # canonical acceptance: no earlier-indexed join contains the tuple
+                keep = np.ones(c, dtype=bool)
+                for i in range(j):
+                    keep &= ~self.prober.contains(names[i], rows)
+                self.stats.canonical_rejects += int((~keep).sum())
+                kidx = np.nonzero(keep)[0]
+                if kidx.shape[0]:
+                    acc_rows.append(rows_subset(rows, kidx))
+                    acc_home.extend([j] * kidx.shape[0])
+                    count += kidx.shape[0]
+        if count < n:
+            raise RuntimeError("BernoulliUnionSampler: round budget exhausted")
+        rows = {a: np.concatenate([p[a] for p in acc_rows])[:n] for a in self.attrs}
+        home = np.asarray(acc_home[:n], dtype=np.int64)
+        from .relation import fingerprint128
+        fp = fingerprint128([rows[a] for a in sorted(self.attrs)])
+        return SampleSet(self.attrs, rows, home, fp, self.stats)
+
+
+class SetUnionSampler:
+    """Algorithm 1 — non-Bernoulli cover-based set-union sampling."""
+
+    def __init__(self, cat: Catalog, joins: Sequence[JoinSpec], cover: Cover,
+                 membership: str = "probe", join_method: str = "ew",
+                 strict_paper_loop: bool = False,
+                 seed: int = 0, retry_rounds: int = 64,
+                 candidate_batch: int = 32, predicate=None):
+        if membership not in ("probe", "record"):
+            raise ValueError("membership must be 'probe' or 'record'")
+        self.cat = cat
+        self.joins = list(joins)
+        self.by_name = {j.name: j for j in self.joins}
+        self.cover = cover
+        self.order = list(cover.order)                      # cover order (names)
+        self.samplers = {j.name: JoinSampler(cat, j, method=join_method)
+                         for j in self.joins}
+        self.prober = MembershipProber(cat, self.joins)
+        self.membership = membership
+        self.strict_paper_loop = strict_paper_loop
+        self.rng = np.random.default_rng(seed)
+        self.attrs = list(self.joins[0].output_attrs)
+        self.retry_rounds = retry_rounds
+        self.candidate_batch = candidate_batch
+        # §8.3 rejection-mode selection predicate (RejectingPredicate or None):
+        # applied to candidates before cover acceptance — appropriate for
+        # non-selective predicates (pushdown() is the pre-filter alternative)
+        self.predicate = predicate
+        self.stats = SamplerStats()
+        # record mode state: fingerprint -> home join order-index
+        self._record: Dict[int, int] = {}
+
+    # ------------------------------------------------------------------ util
+    def _selection_probs(self) -> np.ndarray:
+        p = np.asarray(self.cover.selection_probs(), dtype=np.float64)
+        p = np.maximum(p, 0)
+        s = p.sum()
+        return p / s if s > 0 else np.full(len(p), 1.0 / len(p))
+
+    def _uniform_candidates(self, name: str, count: int) -> Optional[Rows]:
+        from .join_sampler import EmptyJoinError
+        try:
+            rows, draws = self.samplers[name].sample_uniform(self.rng, count,
+                                                             batch=max(count, 64))
+        except EmptyJoinError:
+            # the estimate gave a positive piece size to an empty join —
+            # treat the slots as dropped (estimation noise, logged)
+            return None
+        self.stats.candidate_draws += draws
+        return rows
+
+    def _cover_accept_probe(self, oidx: int, rows: Rows) -> np.ndarray:
+        """accept iff no earlier join in cover order contains the tuple."""
+        n = next(iter(rows.values())).shape[0]
+        keep = np.ones(n, dtype=bool)
+        for i in range(oidx):
+            if not keep.any():
+                break
+            keep &= ~self.prober.contains(self.order[i], rows)
+        return keep
+
+    # --------------------------------------------------------------- sampling
+    def sample(self, n: int) -> SampleSet:
+        if self.membership == "probe" and not self.strict_paper_loop:
+            return self._sample_probe(n)
+        return self._sample_sequential(n)
+
+    # -- exact mode: batched, stateless, provably uniform ---------------------
+    def _sample_probe(self, n: int) -> SampleSet:
+        acc_rows: List[Rows] = []
+        acc_home: List[np.ndarray] = []
+        total = 0
+        topups = 0
+        target = n
+        dead_pieces: set = set()
+        while total < n:
+            probs = self._selection_probs()
+            for oidx in dead_pieces:
+                probs[oidx] = 0.0
+            if probs.sum() <= 0:
+                raise RuntimeError("all cover pieces unreachable")
+            probs = probs / probs.sum()
+            need_by_join = self.rng.multinomial(target - 0, probs)
+            for oidx, name in enumerate(self.order):
+                need = int(need_by_join[oidx])
+                got = 0
+                rounds = 0
+                while got < need:
+                    rounds += 1
+                    if rounds > self.retry_rounds:
+                        self.stats.dropped_slots += need - got
+                        dead_pieces.add(oidx)
+                        break
+                    want = max((need - got) * self.candidate_batch, 64)
+                    rows = self._uniform_candidates(name, want)
+                    if rows is None:
+                        self.stats.dropped_slots += need - got
+                        dead_pieces.add(oidx)
+                        break
+                    keep = self._cover_accept_probe(oidx, rows)
+                    if self.predicate is not None:
+                        keep &= self.predicate.accept(rows)
+                    self.stats.cover_rejects += int((~keep).sum())
+                    kidx = np.nonzero(keep)[0][: need - got]
+                    self.stats.iterations += want
+                    if kidx.shape[0]:
+                        acc_rows.append(rows_subset(rows, kidx))
+                        acc_home.append(np.full(kidx.shape[0], oidx, dtype=np.int64))
+                        got += int(kidx.shape[0])
+                total += got
+            target = n - total
+            topups += 1
+            if topups > 64 and total < n:
+                raise RuntimeError("SetUnionSampler: top-up budget exhausted")
+        rows = {a: np.concatenate([p[a] for p in acc_rows])[:n] for a in self.attrs}
+        home = np.concatenate(acc_home)[:n]
+        perm = self.rng.permutation(home.shape[0])
+        rows = {a: c[perm] for a, c in rows.items()}
+        from .relation import fingerprint128
+        fp = fingerprint128([rows[a] for a in sorted(self.attrs)])
+        return SampleSet(self.attrs, rows, home[perm], fp, self.stats)
+
+    # -- record mode / strict paper loop: faithful sequential Alg 1 ----------
+    def _sample_sequential(self, n: int) -> SampleSet:
+        probs = self._selection_probs()
+        out_rows: List[Dict[str, int]] = []
+        out_home: List[int] = []
+        out_fp: List[int] = []
+        from .relation import fingerprint128
+        guard = 0
+        max_guard = max(200 * n, 10_000)
+        while len(out_rows) < n:
+            guard += 1
+            if guard > max_guard:
+                raise RuntimeError("Algorithm 1 budget exhausted (check parameters)")
+            oidx = int(self.rng.choice(len(self.order), p=probs))
+            name = self.order[oidx]
+            accepted = None
+            inner = self.retry_rounds if not self.strict_paper_loop else 1
+            for _ in range(inner):
+                rows = self._uniform_candidates(name, 1)
+                if rows is None:
+                    self.stats.dropped_slots += 1
+                    break
+                self.stats.iterations += 1
+                fp2 = fingerprint128([rows[a] for a in sorted(self.attrs)])[0]
+                fpi = _fp_to_int(fp2)
+                if self.predicate is not None and not bool(
+                        self.predicate.accept(rows)[0]):
+                    self.stats.cover_rejects += 1
+                    continue
+                if self.membership == "probe":
+                    ok = bool(self._cover_accept_probe(oidx, rows)[0])
+                    if ok:
+                        accepted = (rows, fpi)
+                        break
+                    self.stats.cover_rejects += 1
+                else:
+                    home = self._record.get(fpi)
+                    if home is not None and home < oidx:
+                        self.stats.cover_rejects += 1
+                        continue  # Alg 1 line 8: reject
+                    if home is not None and home > oidx:
+                        # Alg 1 lines 10-12: revision
+                        self.stats.revisions += 1
+                        removed = [k for k, f in enumerate(out_fp) if f == fpi]
+                        for k in reversed(removed):
+                            out_rows.pop(k)
+                            out_home.pop(k)
+                            out_fp.pop(k)
+                        self.stats.backtrack_removed += len(removed)
+                    self._record[fpi] = oidx
+                    accepted = (rows, fpi)
+                    break
+            if accepted is None:
+                continue
+            rows, fpi = accepted
+            out_rows.append({a: int(rows[a][0]) for a in self.attrs})
+            out_home.append(oidx)
+            out_fp.append(fpi)
+        rows = {a: np.asarray([r[a] for r in out_rows[:n]], dtype=np.int64)
+                for a in self.attrs}
+        home = np.asarray(out_home[:n], dtype=np.int64)
+        fp = fingerprint128([rows[a] for a in sorted(self.attrs)])
+        return SampleSet(self.attrs, rows, home, fp, self.stats)

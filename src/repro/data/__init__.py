@@ -1,0 +1,7 @@
+"""Data substrate: TPC-H-lite generator, workloads, tuple→token encoding, pipeline."""
+
+from .tpch import TpchLite, generate, horizontal_split, make_variants, vertical_split
+from .workloads import WORKLOADS, Workload, uq1, uq2, uq3, uq4
+
+__all__ = ["TpchLite", "WORKLOADS", "Workload", "generate", "horizontal_split",
+           "make_variants", "uq1", "uq2", "uq3", "uq4", "vertical_split"]

@@ -1,0 +1,124 @@
+"""Fused GQA decode attention (flash-decoding) Pallas TPU kernel.
+
+Model-side hot spot for the serving cells (beyond the paper's scope, see
+DESIGN.md §6): one new query token against a long KV cache, with
+
+* grouped KV heads (G = n_q_heads / n_kv_heads queries share one KV head),
+* optional logit soft-capping (gemma-2: ``cap * tanh(logits / cap)``),
+* optional sliding-window masking (gemma-2 local layers),
+* online-softmax accumulation over KV blocks (scratch carries m/l/acc).
+
+Grid = (batch, kv_head, kv_blocks); the KV-block axis is the sequential inner
+axis so the VMEM scratch accumulator is valid across steps.  Tiling:
+q tile (G, D) and KV blocks (BS, D) are MXU-shaped (D=head_dim is 128-aligned
+for all assigned archs; BS=128 rows).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+KV_BLOCK = 128
+NEG_INF = -1e30
+
+
+def decode_attn_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
+                       m_ref, l_ref, acc_ref, *,
+                       scale: float, softcap: float, window: int,
+                       n_blocks: int):
+    sblk = pl.program_id(2)
+
+    @pl.when(sblk == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)            # (G, D)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)      # (BS, D)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)      # (BS, D)
+    logits = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32) * scale
+    if softcap > 0:
+        logits = softcap * jnp.tanh(logits / softcap)
+
+    length = len_ref[0, 0]
+    spos = sblk * k.shape[0] + jax.lax.broadcasted_iota(
+        jnp.int32, (1, k.shape[0]), 1)[0]
+    mask = spos < length
+    if window > 0:
+        mask &= spos >= (length - window)
+    logits = jnp.where(mask[None, :], logits, NEG_INF)
+
+    m_old = m_ref[...]                              # (G, 1)
+    m_new = jnp.maximum(m_old, jnp.max(logits, axis=1, keepdims=True))
+    alpha = jnp.exp(m_old - m_new)
+    p = jnp.exp(logits - m_new)
+    p = jnp.where(mask[None, :], p, 0.0)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(sblk == n_blocks - 1)
+    def _finish():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "softcap", "window",
+                                             "interpret"))
+def _decode_attn(q4, k4, v4, lengths, scale: float, softcap: float,
+                 window: int, interpret: bool = True):
+    B, KVH, G, D = q4.shape
+    S = k4.shape[1]
+    n_blocks = S // KV_BLOCK
+    out = pl.pallas_call(
+        functools.partial(decode_attn_kernel, scale=scale, softcap=softcap,
+                          window=window, n_blocks=n_blocks),
+        grid=(B, KVH, n_blocks),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, h, s: (b, 0)),                 # lengths
+            pl.BlockSpec((1, 1, G, D), lambda b, h, s: (b, h, 0, 0)),     # q
+            pl.BlockSpec((1, KV_BLOCK, 1, D), lambda b, h, s: (b, s, h, 0)),
+            pl.BlockSpec((1, KV_BLOCK, 1, D), lambda b, h, s: (b, s, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, s: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KVH, G, D), q4.dtype),
+        scratch_shapes=[pltpu.VMEM((G, 1), jnp.float32),
+                        pltpu.VMEM((G, 1), jnp.float32),
+                        pltpu.VMEM((G, D), jnp.float32)],
+        interpret=interpret,
+    )(lengths, q4, k4, v4)
+    return out
+
+
+def decode_attention_pallas(q, k, v, lengths, scale: Optional[float] = None,
+                            softcap: float = 0.0, window: int = 0,
+                            interpret: bool = True):
+    """q (B,H,D), k/v (B,S,KVH,D), lengths (B,) -> (B,H,D)."""
+    q = jnp.asarray(q)
+    k = jnp.asarray(k)
+    v = jnp.asarray(v)
+    B, H, D = q.shape
+    S, KVH = k.shape[1], k.shape[2]
+    if S % KV_BLOCK:
+        pad = KV_BLOCK - S % KV_BLOCK
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    G = H // KVH
+    q4 = q.reshape(B, KVH, G, D)
+    lengths2 = jnp.asarray(lengths, jnp.int32).reshape(B, 1)
+    if scale is None:
+        scale = 1.0 / float(np.sqrt(D))
+    out = _decode_attn(q4, k, v, lengths2, scale=float(scale),
+                       softcap=float(softcap), window=int(window),
+                       interpret=interpret)
+    return out.reshape(B, H, D)

@@ -1,0 +1,116 @@
+"""Segment-degree statistics kernel over a sorted key column.
+
+Computes ``(distinct_count, max_degree)`` in one pass — the statistics the
+catalog feeds to Theorem 4 (HISTOGRAM-BASED) and to the extended-Olken
+accept/reject ratios.  Grid iterates key blocks sequentially (TPU grids are
+sequential per core); run state is carried across blocks in SMEM scratch:
+
+    carry = (last key of previous block, length of its trailing run,
+             running max degree, running distinct count)
+
+Within a block, run lengths come from a branchless ``cummax`` over new-run
+positions (VPU-dense, no gather).  Padding keys (+inf sentinels) are masked
+by the global index.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .searchsorted import KEY_BLOCK, _pad_np, split64_np
+
+
+def segdegree_kernel(k_hi_ref, k_lo_ref, out_ref, carry_ref, *, n: int):
+    b = pl.program_id(0)
+    k_hi = k_hi_ref[0, :]
+    k_lo = k_lo_ref[0, :]
+    width = k_hi.shape[0]
+    gidx = b * width + jax.lax.broadcasted_iota(jnp.int32, (1, width), 1)[0]
+    valid = gidx < n
+
+    @pl.when(b == 0)
+    def _init():
+        carry_ref[0] = jnp.int32(0)   # prev key hi (unused at start)
+        carry_ref[1] = jnp.int32(0)   # prev key lo
+        carry_ref[2] = jnp.int32(0)   # trailing run length
+        carry_ref[3] = jnp.int32(0)   # max degree
+        carry_ref[4] = jnp.int32(0)   # distinct count
+        carry_ref[5] = jnp.int32(0)   # have_prev flag
+
+    prev_hi, prev_lo = carry_ref[0], carry_ref[1]
+    run_in, max_in, distinct_in, have_prev = (carry_ref[2], carry_ref[3],
+                                              carry_ref[4], carry_ref[5])
+
+    shift_hi = jnp.concatenate([jnp.full((1,), prev_hi, jnp.int32), k_hi[:-1]])
+    shift_lo = jnp.concatenate([jnp.full((1,), prev_lo, jnp.int32), k_lo[:-1]])
+    same = (k_hi == shift_hi) & (k_lo == shift_lo)
+    first_pos = jnp.arange(width, dtype=jnp.int32) == 0
+    # position 0 of block 0 always starts a run (no previous key)
+    same = jnp.where(first_pos & (have_prev == 0) & (b == 0), False, same)
+    new_run = (~same) & valid
+
+    idx = jnp.arange(width, dtype=jnp.int32)
+    start = jax.lax.cummax(jnp.where(new_run, idx, -1))
+    # run length at position i (runs starting before the block add carry)
+    length = jnp.where(start >= 0, idx - start + 1, idx + 1 + run_in)
+    length = jnp.where(valid, length, 0)
+
+    n_valid = jnp.sum(valid.astype(jnp.int32))
+    block_distinct = jnp.sum(new_run.astype(jnp.int32))
+    block_max = jnp.max(length, initial=0)
+
+    # trailing run length = length at last valid position (0 if none valid)
+    last_valid = jnp.max(jnp.where(valid, idx, -1), initial=-1)
+    trailing = jnp.sum(jnp.where(idx == last_valid, length, 0))
+    trailing = jnp.where(n_valid > 0, trailing, run_in)
+    new_prev_hi = jnp.sum(jnp.where(idx == last_valid, k_hi, 0))
+    new_prev_lo = jnp.sum(jnp.where(idx == last_valid, k_lo, 0))
+
+    carry_ref[0] = jnp.where(n_valid > 0, new_prev_hi, prev_hi)
+    carry_ref[1] = jnp.where(n_valid > 0, new_prev_lo, prev_lo)
+    carry_ref[2] = trailing
+    carry_ref[3] = jnp.maximum(max_in, block_max)
+    carry_ref[4] = distinct_in + block_distinct
+    carry_ref[5] = jnp.maximum(have_prev, (n_valid > 0).astype(jnp.int32))
+
+    out_ref[0, 0] = carry_ref[4]
+    out_ref[0, 1] = carry_ref[3]
+
+
+@functools.partial(jax.jit, static_argnames=("n", "interpret"))
+def _segdegree_i32(k_hi2, k_lo2, n: int, interpret: bool = True):
+    nb = k_hi2.shape[0]
+    out = pl.pallas_call(
+        functools.partial(segdegree_kernel, n=n),
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((1, KEY_BLOCK), lambda i: (i, 0)),
+                  pl.BlockSpec((1, KEY_BLOCK), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, 2), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 2), jnp.int32),
+        scratch_shapes=[pltpu.SMEM((8,), jnp.int32)],
+        interpret=interpret,
+    )(k_hi2, k_lo2)
+    return out
+
+
+def segdegree_pallas(sorted_keys, interpret: bool = True) -> Tuple[int, int]:
+    """(distinct_count, max_degree) of a sorted key column."""
+    keys = np.asarray(sorted_keys, dtype=np.int64)
+    n = keys.shape[0]
+    if n == 0:
+        return 0, 0
+    kp = _pad_np(keys, KEY_BLOCK, np.iinfo(np.int64).max)
+    k_hi, k_lo = split64_np(kp)
+    nb = kp.shape[0] // KEY_BLOCK
+    out = _segdegree_i32(jnp.asarray(k_hi.reshape(nb, KEY_BLOCK)),
+                         jnp.asarray(k_lo.reshape(nb, KEY_BLOCK)),
+                         n=n, interpret=interpret)
+    out = np.asarray(out)
+    return int(out[0, 0]), int(out[0, 1])

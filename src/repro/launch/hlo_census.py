@@ -1,0 +1,357 @@
+"""Post-optimization HLO census: FLOPs / bytes / collectives with loop scaling.
+
+``compiled.cost_analysis()`` counts every computation ONCE — a ``lax.scan``
+over 88 layers is under-counted 88×.  This module re-derives the roofline
+inputs directly from ``compiled.as_text()``:
+
+* builds the computation call graph (ENTRY → fusions / while bodies / calls),
+* extracts while-loop **trip counts** from the loop-condition's comparison
+  constant (scan lowers to ``compare(iv, constant(N))``),
+* counts **dot FLOPs** (2 × prod(result dims) × prod(contracting dims)) and
+  **convolution FLOPs**, scaled by the product of enclosing trip counts,
+* counts **bytes accessed** per instruction (operand + result buffer sizes,
+  fusion interiors excluded — matching XLA's post-fusion metric),
+* sums **collective operand bytes** by kind (all-reduce / all-gather /
+  reduce-scatter / all-to-all / collective-permute, async -start forms
+  included), also trip-scaled.
+
+This is per-device (the partitioned module).  Elementwise FLOPs are not
+counted (MXU dots dominate every cell here; documented in EXPERIMENTS.md).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1,
+                "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+                "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+                "c64": 8, "c128": 16}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+)$")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->")
+_CALL_ATTR_RE = re.compile(r"(?:calls|body|condition|branch_computations|to_apply)="
+                           r"[{]?%?([\w.\-]+(?:,\s*%?[\w.\-]+)*)[}]?")
+_OPND_RE = re.compile(r"%([\w.\-]+)")
+
+_SKIP_BYTES_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+                   "bitcast", "after-all", "partition-id", "replica-id",
+                   "iota"}
+
+_COLL_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Total bytes of a (possibly tuple) HLO type string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _first_shape_bytes(type_str: str) -> int:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    if dt not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dt]
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    result_type: str
+    opcode: str
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: List[Instr]
+
+
+VMEM_THRESHOLD = 8 * 2**20   # tensors >= 8 MiB cannot stay VMEM-resident
+
+
+@dataclasses.dataclass
+class CensusResult:
+    flops: float
+    bytes_accessed: float        # upper bound: all post-fusion instruction I/O
+    hbm_bytes: float             # floor: only tensors >= VMEM_THRESHOLD
+    collective_bytes: Dict[str, float]
+    collective_counts: Dict[str, float]
+    while_trip_counts: Dict[str, int]
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+
+def parse_computations(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry: Optional[str] = None
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        stripped = line.strip()
+        if not stripped:
+            continue
+        mc = _COMP_RE.match(line)
+        if mc and "{" in line and not stripped.startswith("%param"):
+            cur = Computation(mc.group(1), [])
+            comps[cur.name] = cur
+            if line.startswith("ENTRY"):
+                entry = cur.name
+            continue
+        if stripped.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        md = _DEF_RE.match(stripped)
+        if not md:
+            continue
+        name, rhs = md.groups()
+        # result type: either "(tuple, ...)" (match parens) or "dtype[...]{...}"
+        rhs = rhs.strip()
+        if rhs.startswith("("):
+            depth = 0
+            end = 0
+            for i, ch in enumerate(rhs):
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        end = i + 1
+                        break
+            result_type = rhs[:end]
+            rest = rhs[end:].lstrip()
+        else:
+            sp = rhs.find(" ")
+            result_type = rhs if sp < 0 else rhs[:sp]
+            rest = "" if sp < 0 else rhs[sp + 1:].lstrip()
+        # opcode: identifier up to the first "(" in the remainder
+        mo = re.match(r"([\w\-]+)\(", rest)
+        opcode = mo.group(1) if mo else rest.split(" ")[0].split("(")[0]
+        cur.instrs.append(Instr(name, result_type, opcode, stripped))
+    return comps, entry
+
+
+def _trip_count_of(cond: Computation) -> int:
+    """Largest s32 constant in the loop condition ≈ trip count."""
+    best = 1
+    for ins in cond.instrs:
+        for m in re.finditer(r"constant\((-?\d+)\)", ins.line):
+            v = int(m.group(1))
+            if v > best:
+                best = v
+    return best
+
+
+def _dot_flops(ins: Instr, shapes: Dict[str, str]) -> float:
+    out_elems = 1
+    m = _SHAPE_RE.search(ins.result_type)
+    if not m:
+        return 0.0
+    for d in m.group(2).split(","):
+        if d:
+            out_elems *= int(d)
+    # contracting dims sizes from the lhs operand
+    mc = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.line)
+    ops = _OPND_RE.findall(ins.line.split("(", 1)[1])
+    if not ops:
+        return 0.0
+    lhs_type = shapes.get(ops[0], "")
+    ml = _SHAPE_RE.search(lhs_type)
+    if not ml:
+        return 0.0
+    lhs_dims = [int(d) for d in ml.group(2).split(",") if d]
+    contract = 1
+    if mc:
+        for i in mc.group(1).split(","):
+            if i and int(i) < len(lhs_dims):
+                contract *= lhs_dims[int(i)]
+    return 2.0 * out_elems * contract
+
+
+def census(text: str) -> CensusResult:
+    comps, entry = parse_computations(text)
+    shapes: Dict[str, str] = {}
+    for c in comps.values():
+        for ins in c.instrs:
+            shapes[ins.name] = ins.result_type
+
+    # call graph attributes per instruction
+    trip_counts: Dict[str, int] = {}
+    memo: Dict[str, Tuple[float, float, Dict[str, float], Dict[str, float]]] = {}
+
+    def eval_comp(name: str):
+        if name in memo:
+            return memo[name]
+        memo[name] = (0.0, 0.0, 0.0, {}, {})  # cycle guard
+        comp = comps.get(name)
+        if comp is None:
+            return memo[name]
+        flops = 0.0
+        byts = 0.0
+        hbm = 0.0
+        coll: Dict[str, float] = {}
+        cnt: Dict[str, float] = {}
+
+        for ins in comp.instrs:
+            op = ins.opcode
+            if op == "while":
+                mb = re.search(r"body=%?([\w.\-]+)", ins.line)
+                mcnd = re.search(r"condition=%?([\w.\-]+)", ins.line)
+                trips = 1
+                if mcnd and mcnd.group(1) in comps:
+                    trips = _trip_count_of(comps[mcnd.group(1)])
+                    trip_counts[ins.name] = trips
+                if mb:
+                    f, b, h, cl, cc = eval_comp(mb.group(1))
+                    flops += f * trips
+                    byts += b * trips
+                    hbm += h * trips
+                    for k, v in cl.items():
+                        coll[k] = coll.get(k, 0.0) + v * trips
+                    for k, v in cc.items():
+                        cnt[k] = cnt.get(k, 0.0) + v * trips
+                continue
+            if op in ("fusion", "call", "map", "reduce", "reduce-window",
+                      "scatter", "sort", "custom-call", "conditional"):
+                # interior computations: fusion interiors are already
+                # reflected at the call site (operands+result); dots never
+                # appear inside CPU loop fusions, but count callee dots for
+                # call/conditional to be safe.
+                if op in ("call", "conditional"):
+                    mcal = _CALL_ATTR_RE.search(ins.line)
+                    if mcal:
+                        for callee in re.split(r",\s*%?", mcal.group(1)):
+                            f, b, h, cl, cc = eval_comp(callee)
+                            flops += f
+                            byts += b
+                            hbm += h
+                            for k, v in cl.items():
+                                coll[k] = coll.get(k, 0.0) + v
+                            for k, v in cc.items():
+                                cnt[k] = cnt.get(k, 0.0) + v
+            if op in ("dot", "dot-general"):
+                flops += _dot_flops(ins, shapes)
+            if op == "convolution":
+                # conservative: 2 * out_elems * (contracted window) — parse
+                # kernel operand elements / out-channel factor
+                out_b = _first_shape_bytes(ins.result_type)
+                ops = _OPND_RE.findall(ins.line.split("(", 1)[1])
+                ker = shapes.get(ops[1], "") if len(ops) > 1 else ""
+                ker_elems = 0
+                mk = _SHAPE_RE.search(ker)
+                if mk:
+                    ker_elems = 1
+                    for d in mk.group(2).split(","):
+                        if d:
+                            ker_elems *= int(d)
+                flops += 2.0 * out_b * max(ker_elems, 1) / 4.0  # rough
+
+            base = op.replace("-start", "")
+            if base in _COLL_KINDS:
+                if op.endswith("-done"):
+                    continue
+                opnds = _OPND_RE.findall(ins.line.split("(", 1)[1]) if "(" in ins.line else []
+                ob = sum(_shape_bytes(shapes.get(o, "")) for o in opnds)
+                if ob == 0:
+                    ob = _shape_bytes(ins.result_type)
+                coll[base] = coll.get(base, 0.0) + ob
+                cnt[base] = cnt.get(base, 0.0) + 1
+
+            if op in _SKIP_BYTES_OPS or op == "while":
+                continue
+            rb = _shape_bytes(ins.result_type)
+            opnds = _OPND_RE.findall(ins.line.split("(", 1)[1]) if "(" in ins.line else []
+            ob = sum(_shape_bytes(shapes.get(o, "")) for o in opnds
+                     if shapes.get(o))
+            byts += rb + ob
+            # HBM floor: only tensors too big for VMEM residency count —
+            # per-tile flash/SSD traffic stays on-chip in the TPU kernels
+            if rb >= VMEM_THRESHOLD:
+                hbm += rb
+            for o in opnds:
+                osz = _shape_bytes(shapes.get(o, ""))
+                if osz >= VMEM_THRESHOLD:
+                    hbm += osz
+
+        memo[name] = (flops, byts, hbm, coll, cnt)
+        return memo[name]
+
+    if entry is None:
+        # fall back: evaluate the largest computation
+        entry = max(comps, key=lambda k: len(comps[k].instrs)) if comps else ""
+    f, b, h, cl, cc = eval_comp(entry)
+    return CensusResult(f, b, h, cl, cc, trip_counts)
+
+
+def top_contributors(text: str, k: int = 20):
+    """Heaviest instructions by trip-scaled bytes and flops (perf profiling).
+
+    Returns (by_bytes, by_flops): lists of (scaled_value, trips, instr line).
+    """
+    comps, entry = parse_computations(text)
+    shapes: Dict[str, str] = {}
+    for c in comps.values():
+        for ins in c.instrs:
+            shapes[ins.name] = ins.result_type
+
+    # multiplier per computation: product of enclosing while trip counts
+    mult: Dict[str, int] = {}
+
+    def mark(name: str, m: int) -> None:
+        if name not in comps or mult.get(name, 0) >= m:
+            return
+        mult[name] = m
+        for ins in comps[name].instrs:
+            trips = 1
+            if ins.opcode == "while":
+                mcnd = re.search(r"condition=%?([\w.\-]+)", ins.line)
+                if mcnd and mcnd.group(1) in comps:
+                    trips = _trip_count_of(comps[mcnd.group(1)])
+            for attr in _CALL_ATTR_RE.finditer(ins.line):
+                for callee in re.split(r",\s*%?", attr.group(1)):
+                    mark(callee, m * trips)
+
+    if entry:
+        mark(entry, 1)
+
+    by_bytes, by_flops = [], []
+    for cname, comp in comps.items():
+        m = mult.get(cname, 1)
+        for ins in comp.instrs:
+            if ins.opcode in _SKIP_BYTES_OPS or ins.opcode == "while":
+                continue
+            rb = _shape_bytes(ins.result_type)
+            opnds = (_OPND_RE.findall(ins.line.split("(", 1)[1])
+                     if "(" in ins.line else [])
+            ob = sum(_shape_bytes(shapes.get(o, "")) for o in opnds
+                     if shapes.get(o))
+            by_bytes.append(((rb + ob) * m, m, ins.line[:180]))
+            if ins.opcode in ("dot", "dot-general"):
+                by_flops.append((_dot_flops(ins, shapes) * m, m, ins.line[:180]))
+    by_bytes.sort(key=lambda t: -t[0])
+    by_flops.sort(key=lambda t: -t[0])
+    return by_bytes[:k], by_flops[:k]

@@ -1,0 +1,100 @@
+"""Logical-axis sharding rules (MaxText-style) for params, caches, batches.
+
+Logical axes emitted by the model code:
+  "embed"   — d_model rows of weights  -> FSDP over ("pod","data")
+  "heads"   — attention head dims      -> TP over "model"
+  "mlp"     — FFN hidden               -> TP over "model"
+  "vocab"   — embedding rows           -> TP over "model"
+  "experts" — MoE expert axis          -> EP over "model"
+  "layer"   — stacked scan axis        -> never sharded
+  "batch"   — activation batch         -> DP over ("pod","data")
+  "kvseq"   — KV-cache sequence        -> SP ("model", or ("data","model")
+                                          when the batch axis is unsharded —
+                                          the long_500k distributed-decode
+                                          layout)
+  None      — replicated
+
+A rule maps a logical name to mesh axes *if divisibility holds* — otherwise
+the dim falls back to replicated (uneven shards are avoided deliberately so
+shard_map paths stay legal).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .mesh import data_axes, model_axes
+
+
+def _axes_size(mesh: Mesh, axes: Tuple[str, ...]) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def rules(mesh: Mesh, *, batch_sharded: bool = True) -> Dict[str, Tuple[str, ...]]:
+    da = data_axes(mesh)
+    ma = model_axes(mesh)
+    return {
+        "embed": da,
+        "heads": ma,
+        "mlp": ma,
+        "vocab": ma,
+        "experts": ma,
+        "layer": (),
+        "batch": da if batch_sharded else (),
+        "kvseq": ma if batch_sharded else (da + ma),
+    }
+
+
+def spec_for(mesh: Mesh, shape: Tuple[int, ...],
+             logical: Sequence[Optional[str]],
+             rule: Dict[str, Tuple[str, ...]]) -> P:
+    parts = []
+    used: set = set()
+    for dim, name in zip(shape, logical):
+        axes = rule.get(name, ()) if name else ()
+        axes = tuple(a for a in axes if a not in used)
+        if axes and dim % _axes_size(mesh, axes) == 0:
+            parts.append(axes if len(axes) > 1 else axes[0])
+            used.update(axes)
+        else:
+            parts.append(None)
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def tree_shardings(mesh: Mesh, shapes: Dict[str, jax.ShapeDtypeStruct],
+                   logical: Dict[str, Tuple[Optional[str], ...]],
+                   *, batch_sharded: bool = True) -> Dict[str, NamedSharding]:
+    r = rules(mesh, batch_sharded=batch_sharded)
+    return {k: NamedSharding(mesh, spec_for(mesh, tuple(s.shape), logical[k], r))
+            for k, s in shapes.items()}
+
+
+def batch_sharding(mesh: Mesh, global_batch: int) -> NamedSharding:
+    da = data_axes(mesh)
+    if global_batch % _axes_size(mesh, da) == 0:
+        return NamedSharding(mesh, P(da if len(da) > 1 else da[0]))
+    return NamedSharding(mesh, P())
+
+
+def batch_is_sharded(mesh: Mesh, global_batch: int) -> bool:
+    return global_batch % _axes_size(mesh, data_axes(mesh)) == 0
+
+
+def frontend_sharding(mesh: Mesh, global_batch: int) -> NamedSharding:
+    da = data_axes(mesh)
+    if global_batch % _axes_size(mesh, da) == 0:
+        return NamedSharding(mesh, P(da if len(da) > 1 else da[0], None, "model"))
+    return NamedSharding(mesh, P(None, None, "model"))
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

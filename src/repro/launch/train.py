@@ -1,0 +1,114 @@
+"""End-to-end training driver: union-of-joins sample stream → LM training.
+
+The paper's loop in production form: build the workload (TPC-H-lite union of
+joins), warm up the estimators, run Algorithm 1/2 as the data source, encode
+tuples to token batches, and train under the fault-tolerant supervisor with
+periodic checkpoints.
+
+    PYTHONPATH=src python -m repro.launch.train --arch unionlm-100m \
+        --workload UQ3 --steps 200 --batch 8 --seq 256 --warmup histogram
+
+On this CPU container use the smoke configs / small scales; on a TPU mesh the
+same driver runs under `jax.set_mesh(make_production_mesh())` with the
+shardings from launch/sharding.py (see launch/dryrun.py for the lowering).
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..checkpoint.checkpointer import Checkpointer
+from ..configs import get_config, get_smoke_config
+from ..core.framework import estimate_union, warmup
+from ..core.online import OnlineUnionSampler
+from ..core.union_sampler import SetUnionSampler
+from ..data.encode import TokenEncoder
+from ..data.pipeline import UnionSamplePipeline
+from ..data.workloads import WORKLOADS
+from ..launch.ft import FTConfig, TrainSupervisor
+from ..train.optimizer import OptConfig, default_opt_for
+from ..train.train_step import (TrainConfig, init_train_state, make_train_step)
+
+
+def build_pipeline(workload: str, scale: float, seed: int, batch: int,
+                   seq: int, vocab: int, warm: str, online: bool):
+    wl = WORKLOADS[workload](scale=scale, seed=seed)
+    if online:
+        sampler = OnlineUnionSampler(wl.cat, wl.joins, seed=seed)
+    else:
+        wr = warmup(wl.cat, wl.joins, method=warm,
+                    **({"rw_max_walks": 4000} if warm == "random_walk" else {}))
+        est = estimate_union(wr.oracle)
+        sampler = SetUnionSampler(wl.cat, wl.joins, est.cover, seed=seed)
+    enc = TokenEncoder(sorted(wl.joins[0].output_attrs), vocab_size=vocab)
+    return UnionSamplePipeline(sampler, enc, batch=batch, seq_len=seq)
+
+
+def main(argv: Optional[list] = None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="unionlm-100m")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced smoke config for the arch")
+    ap.add_argument("--workload", default="UQ3", choices=list(WORKLOADS))
+    ap.add_argument("--scale", type=float, default=0.02)
+    ap.add_argument("--warmup", default="histogram",
+                    choices=["exact", "histogram", "random_walk"])
+    ap.add_argument("--online", action="store_true",
+                    help="use ONLINE-UNION (Algorithm 2) as the data source")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--checkpoint-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--checkpoint-every", type=int, default=50)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    pipe = build_pipeline(args.workload, args.scale, args.seed, args.batch,
+                          args.seq, cfg.vocab, args.warmup, args.online)
+
+    tc = TrainConfig(opt=OptConfig(kind=default_opt_for(args.arch).kind,
+                                   lr=args.lr),
+                     warmup_steps=max(args.steps // 20, 2),
+                     total_steps=args.steps)
+    state = init_train_state(cfg, tc, seed=args.seed)
+    step_jit = jax.jit(make_train_step(cfg, tc))
+
+    losses = []
+
+    def step_fn(state, batch):
+        toks, tgts = batch
+        state, metrics = step_jit(state, {"tokens": jnp.asarray(toks),
+                                          "targets": jnp.asarray(tgts)})
+        losses.append(float(metrics["loss"]))
+        s = int(state["step"])
+        if s % args.log_every == 0 or s == 1:
+            print(f"step {s:5d}  loss {losses[-1]:.4f}  "
+                  f"lr {float(metrics['lr']):.2e}  "
+                  f"pipeline: {pipe.stats.tuples} tuples "
+                  f"({pipe.stats.sample_seconds:.1f}s sampling)", flush=True)
+        return state, metrics
+
+    ckpt = Checkpointer(args.checkpoint_dir)
+    sup = TrainSupervisor(step_fn, pipe.next_batch, ckpt,
+                          FTConfig(checkpoint_every=args.checkpoint_every),
+                          pipeline_state_fn=pipe.state_dict,
+                          restore_pipeline_fn=pipe.load_state_dict)
+    t0 = time.time()
+    state = sup.run(state, args.steps)
+    dt = time.time() - t0
+    print(f"done: {args.steps} steps in {dt:.1f}s "
+          f"({dt/args.steps:.2f}s/step); loss {losses[0]:.4f} -> {losses[-1]:.4f}; "
+          f"checkpoints={sup.stats.checkpoints}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,411 @@
+"""Model layer library: norms, RoPE, chunked flash attention, GLU MLP.
+
+Pure-functional: params are pytrees of jnp arrays; every constructor returns
+``(init_shapes, apply)``-style helpers via plain functions.  Design points:
+
+* **scan-over-layers** friendly: all block params are stacked on a leading
+  layer axis by the callers in :mod:`repro.models.transformer`.
+* **chunked flash attention** (`flash_attention`): double ``lax.scan`` over
+  query and KV chunks with online softmax; the inner body is ``jax.checkpoint``
+  ed so residency is O(S·chunk) not O(S²) — the memory_analysis of the
+  dry-run reflects real TPU deployability.  Supports causal, sliding-window,
+  logit softcap, and cross-attention (no mask).
+* **GQA decode** path is plain jnp over the (sharded) KV cache — XLA SPMD
+  turns the softmax reductions over a sequence-sharded cache into the
+  flash-decoding collective pattern (partial max/sum all-reduce).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Activation sharding constraints (sequence-parallel residual stream)
+# ---------------------------------------------------------------------------
+
+
+def shard_activations(x: jnp.ndarray, seq_axis: int = 1) -> jnp.ndarray:
+    """Constrain (B, S, d) activations to batch→(pod,data), seq→model.
+
+    Pinning the *saved residual stream* (the tensors the remat policy keeps
+    per layer) to a sequence-parallel layout is what keeps per-device
+    activation memory O(S/model): without it GSPMD is free to replicate the
+    (L, B, S, d) stacked residuals (observed 128 GiB/device on the dry-run —
+    EXPERIMENTS.md §Perf).  No-op when tracing without an ambient mesh
+    (smoke tests) or when dims don't divide.
+    """
+    try:
+        am = jax.sharding.get_abstract_mesh()
+    except Exception:
+        return x
+    if am is None or not getattr(am, "axis_names", ()):  # no mesh: no-op
+        return x
+    axes = am.axis_names
+    da = tuple(a for a in ("pod", "data") if a in axes)
+    da_n = int(np.prod([am.shape[a] for a in da])) if da else 1
+    mo = "model" if "model" in axes else None
+    mo_n = am.shape["model"] if mo else 1
+    parts: list = [None] * x.ndim
+    if da and x.shape[0] % da_n == 0 and da_n > 1:
+        parts[0] = da if len(da) > 1 else da[0]
+    if mo and x.ndim >= 3 and x.shape[seq_axis] % mo_n == 0 and mo_n > 1:
+        parts[seq_axis] = mo
+    if all(p is None for p in parts):
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.PartitionSpec(*parts))
+
+
+def shard_logits(x: jnp.ndarray) -> jnp.ndarray:
+    """(T, V) or (B, C, V) logits: batch→(pod,data), vocab→model."""
+    try:
+        am = jax.sharding.get_abstract_mesh()
+    except Exception:
+        return x
+    if am is None or not getattr(am, "axis_names", ()):
+        return x
+    axes = am.axis_names
+    da = tuple(a for a in ("pod", "data") if a in axes)
+    da_n = int(np.prod([am.shape[a] for a in da])) if da else 1
+    mo_n = am.shape["model"] if "model" in axes else 1
+    parts: list = [None] * x.ndim
+    if da and x.shape[0] % da_n == 0 and da_n > 1:
+        parts[0] = da if len(da) > 1 else da[0]
+    if "model" in axes and x.shape[-1] % mo_n == 0 and mo_n > 1:
+        parts[-1] = "model"
+    if all(p is None for p in parts):
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.PartitionSpec(*parts))
+
+
+# ---------------------------------------------------------------------------
+# Norms / embeddings / rotary
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float = 10000.0) -> jnp.ndarray:
+    """x (..., S, H, D), positions (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None].astype(jnp.float32) * freq[None, :]  # (..., S, half)
+    cos = jnp.cos(ang)[..., :, None, :]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def softcap(logits: jnp.ndarray, cap: float) -> jnp.ndarray:
+    if cap and cap > 0:
+        return cap * jnp.tanh(logits / cap)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# Chunked flash attention (training / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _attn_chunk(q, k, v, qpos, kpos, *, scale, causal, window, cap):
+    """One (q_chunk × kv_chunk) online-softmax tile. fp32 accumulation."""
+    # q (B, KV, G, Cq, D), k/v (B, KV, Ck, D)
+    logits = jnp.einsum("bkgqd,bkcd->bkgqc", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    logits = softcap(logits, cap)
+    mask = jnp.ones((qpos.shape[0], kpos.shape[0]), dtype=bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if window and window > 0:
+        mask &= kpos[None, :] > (qpos[:, None] - window)
+    logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    m = jnp.max(logits, axis=-1)
+    p = jnp.exp(logits - m[..., None])
+    p = jnp.where(mask[None, None, None], p, 0.0)
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bkgqc,bkcd->bkgqd", p, v,
+                   preferred_element_type=jnp.float32)
+    return m, l, o
+
+
+def fit_chunk(total: int, want: int) -> int:
+    """Largest chunk <= want that divides total (whisper's 1500 -> 250)."""
+    c = max(min(want, total), 1)
+    while total % c:
+        c -= 1
+    return c
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    cap: float = 0.0, q_chunk: int = 256,
+                    kv_chunk: int = 512, q_offset: int = 0) -> jnp.ndarray:
+    """q (B,S,H,D), k/v (B,T,KV,D) -> (B,S,H,D). Double-scan online softmax."""
+    B, S, H, D = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = 1.0 / float(np.sqrt(D))
+    q_chunk = fit_chunk(S, q_chunk)
+    kv_chunk = fit_chunk(T, kv_chunk)
+    nq, nk = S // q_chunk, T // kv_chunk
+
+    qr = q.reshape(B, nq, q_chunk, KV, G, D).transpose(1, 0, 3, 4, 2, 5)
+    kr = k.reshape(B, nk, kv_chunk, KV, D).transpose(1, 0, 3, 2, 4)
+    vr = v.reshape(B, nk, kv_chunk, KV, D).transpose(1, 0, 3, 2, 4)
+
+    def q_step(_, qi_and_idx):
+        qi, iq = qi_and_idx
+        qpos = q_offset + iq * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(carry, ki_vi_idx):
+            m0, l0, o0 = carry
+            ki, vi, ik = ki_vi_idx
+            kpos = ik * kv_chunk + jnp.arange(kv_chunk)
+            m1, l1, o1 = _attn_chunk(qi, ki, vi, qpos, kpos, scale=scale,
+                                     causal=causal, window=window, cap=cap)
+            m = jnp.maximum(m0, m1)
+            a0 = jnp.exp(m0 - m)
+            a1 = jnp.exp(m1 - m)
+            return (m, l0 * a0 + l1 * a1,
+                    o0 * a0[..., None] + o1 * a1[..., None]), None
+
+        m0 = jnp.full((B, KV, G, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, q_chunk), jnp.float32)
+        o0 = jnp.zeros((B, KV, G, q_chunk, D), jnp.float32)
+        body = jax.checkpoint(kv_step, policy=jax.checkpoint_policies.nothing_saveable)
+        (m, l, o), _ = jax.lax.scan(body, (m0, l0, o0),
+                                    (kr, vr, jnp.arange(nk)))
+        out = o / jnp.maximum(l, 1e-30)[..., None]
+        return None, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_step, None, (qr, jnp.arange(nq)))
+    # outs (nq, B, KV, G, q_chunk, D) -> (B, S, H, D)
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(B, S, H, D)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# custom-VJP flash attention (recompute backward; saves only o + lse)
+#
+# Differentiating the double-scan forward saves every inner-step (m, l, acc)
+# carry in f32 — ~16 GiB per layer at train_4k (§Perf iteration 1).  The
+# canonical fix is the FlashAttention backward: save (q, k, v, o, lse) only
+# and recompute logits per tile, giving dq/dk/dv with O(S·chunk) residency.
+# ---------------------------------------------------------------------------
+
+
+def _mask_for(qpos, kpos, causal, window, prefix_len):
+    mask = jnp.ones((qpos.shape[0], kpos.shape[0]), dtype=bool)
+    if causal:
+        c = qpos[:, None] >= kpos[None, :]
+        if prefix_len:
+            c |= kpos[None, :] < prefix_len
+        mask &= c
+    if window and window > 0:
+        w = kpos[None, :] > (qpos[:, None] - window)
+        if prefix_len:
+            w |= kpos[None, :] < prefix_len
+        mask &= w
+    return mask
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def flash_attention_cv(q, k, v, causal, window, cap, q_chunk, kv_chunk,
+                       prefix_len):
+    o, _ = _flash_fwd_impl(q, k, v, causal, window, cap, q_chunk, kv_chunk,
+                           prefix_len)
+    return o
+
+
+def _flash_fwd_impl(q, k, v, causal, window, cap, q_chunk, kv_chunk,
+                    prefix_len):
+    B, S, H, D = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = 1.0 / float(np.sqrt(D))
+    qr = q.reshape(B, S // q_chunk, q_chunk, KV, G, D).transpose(1, 0, 3, 4, 2, 5)
+    kr = k.reshape(B, T // kv_chunk, kv_chunk, KV, D).transpose(1, 0, 3, 2, 4)
+    vr = v.reshape(B, T // kv_chunk, kv_chunk, KV, D).transpose(1, 0, 3, 2, 4)
+    nk = T // kv_chunk
+
+    def q_step(_, qi_idx):
+        qi, iq = qi_idx
+        qpos = iq * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(carry, kv_idx):
+            m0, l0, o0 = carry
+            ki, vi, ik = kv_idx
+            kpos = ik * kv_chunk + jnp.arange(kv_chunk)
+            logits = jnp.einsum("bkgqd,bkcd->bkgqc", qi, ki,
+                                preferred_element_type=jnp.float32) * scale
+            logits = softcap(logits, cap)
+            mask = _mask_for(qpos, kpos, causal, window, prefix_len)
+            logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+            m1 = jnp.max(logits, axis=-1)
+            p = jnp.exp(logits - m1[..., None])
+            p = jnp.where(mask[None, None, None], p, 0.0)
+            l1 = p.sum(-1)
+            o1 = jnp.einsum("bkgqc,bkcd->bkgqd", p, vi,
+                            preferred_element_type=jnp.float32)
+            m = jnp.maximum(m0, m1)
+            a0, a1 = jnp.exp(m0 - m), jnp.exp(m1 - m)
+            return (m, l0 * a0 + l1 * a1,
+                    o0 * a0[..., None] + o1 * a1[..., None]), None
+
+        m0 = jnp.full((B, KV, G, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, q_chunk), jnp.float32)
+        o0 = jnp.zeros((B, KV, G, q_chunk, D), jnp.float32)
+        (m, l, o), _ = jax.lax.scan(kv_step, (m0, l0, o0),
+                                    (kr, vr, jnp.arange(nk)))
+        out = (o / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))
+        return None, (out, lse)
+
+    _, (outs, lses) = jax.lax.scan(q_step, None, (qr, jnp.arange(S // q_chunk)))
+    o = outs.transpose(1, 0, 4, 2, 3, 5).reshape(B, S, H, D)
+    lse = lses.transpose(1, 0, 4, 2, 3).reshape(B, S, H)  # (nq,B,KV,G,qc)->(B,S,H)
+    return o, lse
+
+
+def _flash_fwd_rule(q, k, v, causal, window, cap, q_chunk, kv_chunk,
+                    prefix_len):
+    o, lse = _flash_fwd_impl(q, k, v, causal, window, cap, q_chunk, kv_chunk,
+                             prefix_len)
+    return o, (q, k, v, o, lse)
+
+
+def _flash_bwd_rule(causal, window, cap, q_chunk, kv_chunk, prefix_len,
+                    res, do):
+    q, k, v, o, lse = res
+    B, S, H, D = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = 1.0 / float(np.sqrt(D))
+    nq, nk = S // q_chunk, T // kv_chunk
+
+    qr = q.reshape(B, nq, q_chunk, KV, G, D).transpose(1, 0, 3, 4, 2, 5)
+    do_r = do.reshape(B, nq, q_chunk, KV, G, D).transpose(1, 0, 3, 4, 2, 5)
+    o_r = o.reshape(B, nq, q_chunk, KV, G, D).transpose(1, 0, 3, 4, 2, 5)
+    lse_r = lse.reshape(B, nq, q_chunk, KV, G).transpose(1, 0, 3, 4, 2)
+    kr = k.reshape(B, nk, kv_chunk, KV, D).transpose(1, 0, 3, 2, 4)
+    vr = v.reshape(B, nk, kv_chunk, KV, D).transpose(1, 0, 3, 2, 4)
+
+    # delta = rowsum(do * o) (B,KV,G,qc) per q chunk
+    delta_r = jnp.einsum("nbkgqd,nbkgqd->nbkgq", do_r.astype(jnp.float32),
+                         o_r.astype(jnp.float32))
+
+    def kv_step(dq_acc, kv_idx):
+        ki, vi, ik = kv_idx
+        kpos = ik * kv_chunk + jnp.arange(kv_chunk)
+
+        def q_step(carry, q_idx):
+            dk0, dv0 = carry
+            qi, doi, lsei, deltai, iq = q_idx
+            qpos = iq * q_chunk + jnp.arange(q_chunk)
+            z = jnp.einsum("bkgqd,bkcd->bkgqc", qi, ki,
+                           preferred_element_type=jnp.float32) * scale
+            if cap and cap > 0:
+                t = jnp.tanh(z / cap)
+                logits = cap * t
+                dz_fac = (1.0 - t * t)          # d logits / d z
+            else:
+                logits = z
+                dz_fac = None
+            mask = _mask_for(qpos, kpos, causal, window, prefix_len)
+            p = jnp.exp(jnp.where(mask[None, None, None], logits, NEG_INF)
+                        - lsei[..., None])
+            p = jnp.where(mask[None, None, None], p, 0.0)
+            dv = jnp.einsum("bkgqc,bkgqd->bkcd", p, doi.astype(jnp.float32))
+            dp = jnp.einsum("bkgqd,bkcd->bkgqc", doi.astype(jnp.float32), vi)
+            ds = p * (dp - deltai[..., None])
+            if dz_fac is not None:
+                ds = ds * dz_fac
+            dq_i = jnp.einsum("bkgqc,bkcd->bkgqd", ds, ki) * scale
+            dk = jnp.einsum("bkgqc,bkgqd->bkcd", ds, qi) * scale
+            return (dk0 + dk, dv0 + dv), dq_i.astype(q.dtype)
+
+        zero_k = jnp.zeros((B, KV, kv_chunk, D), jnp.float32)
+        (dk, dv), dq_parts = jax.lax.scan(
+            q_step, (zero_k, zero_k),
+            (qr, do_r, lse_r, delta_r, jnp.arange(nq)))
+        # dq accumulates as a carry (never nk stacked dq-sized tensors)
+        return dq_acc + dq_parts.astype(jnp.float32), (dk, dv)
+
+    dq0 = jnp.zeros((nq, B, KV, G, q_chunk, D), jnp.float32)
+    dq_acc, (dks, dvs) = jax.lax.scan(kv_step, dq0,
+                                      (kr, vr, jnp.arange(nk)))
+    dq = dq_acc.transpose(1, 0, 4, 2, 3, 5).reshape(B, S, H, D)
+    dk = dks.transpose(1, 0, 3, 2, 4).reshape(B, T, KV, D)
+    dv = dvs.transpose(1, 0, 3, 2, 4).reshape(B, T, KV, D)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+flash_attention_cv.defvjp(_flash_fwd_rule, _flash_bwd_rule)
+
+
+# ---------------------------------------------------------------------------
+# Decode attention (single new token vs cache)
+# ---------------------------------------------------------------------------
+
+
+def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                     length: jnp.ndarray, *, window: Optional[int] = None,
+                     cap: float = 0.0) -> jnp.ndarray:
+    """q (B,H,D), cache (B,T,KV,D), length (B,) -> (B,H,D).
+
+    Plain jnp: under pjit with a sequence-sharded cache, XLA SPMD emits the
+    distributed flash-decoding pattern (all-reduce of partial max/sum).
+    """
+    B, H, D = q.shape
+    T, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    scale = 1.0 / float(np.sqrt(D))
+    qg = q.reshape(B, KV, G, D)
+    logits = jnp.einsum("bkgd,btkd->bkgt", qg.astype(jnp.float32),
+                        k_cache.astype(jnp.float32)) * scale
+    logits = softcap(logits, cap)
+    pos = jnp.arange(T)[None, :]
+    mask = pos < length[:, None]
+    if window and window > 0:
+        mask &= pos >= (length[:, None] - window)
+    logits = jnp.where(mask[:, None, None, :], logits, NEG_INF)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    p = jnp.exp(logits - m)
+    p = jnp.where(mask[:, None, None, :], p, 0.0)
+    out = jnp.einsum("bkgt,btkd->bkgd", p, v_cache.astype(jnp.float32))
+    out = out / jnp.maximum(p.sum(-1)[..., None], 1e-30)
+    return out.reshape(B, H, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+def swiglu(x: jnp.ndarray, w_gate: jnp.ndarray, w_up: jnp.ndarray,
+           w_down: jnp.ndarray) -> jnp.ndarray:
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    return jnp.einsum("...f,fd->...d", jax.nn.silu(g) * u, w_down)
+
+
+def gelu_mlp(x: jnp.ndarray, w_up: jnp.ndarray, w_down: jnp.ndarray) -> jnp.ndarray:
+    return jnp.einsum("...f,fd->...d", jax.nn.gelu(
+        jnp.einsum("...d,df->...f", x, w_up)), w_down)

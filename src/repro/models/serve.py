@@ -1,0 +1,313 @@
+"""Serving: KV/state caches, prefill, and single-token decode per family.
+
+Cache layouts (stacked on the layer axis so decode scans over layers):
+
+* dense/moe/vlm : k,v (L, B, S, KV, hd) — batch on "data", seq on "model"
+                  (sequence-parallel decode: XLA SPMD turns the softmax over
+                  the seq-sharded cache into partial-max/sum all-reduces —
+                  distributed flash-decoding).
+* gemma2        : local layers use a **window-capped ring buffer**
+                  (L/2, B, W, KV, hd) — the reason gemma2 runs `long_500k`:
+                  only the global half of the layers holds full-length KV.
+* mamba2        : h (L, B, H, N, P) + conv tail (L, B, k-1, conv_dim) — O(1)
+                  in context length.
+* zamba2        : per-group mamba states + one KV cache per shared-attention
+                  application (G, B, S, KV, hd).
+* encdec        : decoder self-KV + precomputed cross-attention K/V.
+
+``decode_step(params, cfg, cache, tokens, lengths)`` appends one token at
+position ``lengths`` (per batch row) and returns next-token logits.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import decode_attention, rms_norm, rope, softcap, swiglu
+from .moe import moe_ffn
+from .ssm import mamba2_decode
+from .transformer import ModelConfig, _embed_tokens, _sub
+
+Cache = Dict[str, jnp.ndarray]
+
+
+# ---------------------------------------------------------------------------
+# Cache construction (shapes only — dry-run uses these as ShapeDtypeStruct)
+# ---------------------------------------------------------------------------
+
+
+def cache_entries(cfg: ModelConfig, batch: int, max_len: int
+                  ) -> Dict[str, Tuple[Tuple[int, ...], Tuple[Optional[str], ...]]]:
+    """name -> (shape, logical axes)."""
+    L, KV, hd = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+    dt = ("batch", "kvseq", None, None)
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        S = max_len + (cfg.n_frontend_tokens if fam == "vlm" else 0)
+        return {"k": ((L, batch, S, KV, hd), ("layer",) + dt),
+                "v": ((L, batch, S, KV, hd), ("layer",) + dt)}
+    if fam == "gemma2":
+        half = L // 2
+        W = min(cfg.window, max_len)
+        return {
+            "k_loc": ((half, batch, W, KV, hd), ("layer",) + dt),
+            "v_loc": ((half, batch, W, KV, hd), ("layer",) + dt),
+            "k_glob": ((half, batch, max_len, KV, hd), ("layer",) + dt),
+            "v_glob": ((half, batch, max_len, KV, hd), ("layer",) + dt),
+        }
+    if fam == "mamba2":
+        d = cfg.ssm_dims
+        return {
+            "h": ((L, batch, d.n_heads, d.state, d.head_dim),
+                  ("layer", "batch", "heads", None, None)),
+            "conv": ((L, batch, d.conv_k - 1, d.conv_dim),
+                     ("layer", "batch", None, "mlp")),
+        }
+    if fam == "zamba2":
+        d = cfg.ssm_dims
+        G, P = cfg.n_zamba_groups, cfg.mamba_per_attn
+        ent = {
+            "h": ((G, P, batch, d.n_heads, d.state, d.head_dim),
+                  ("layer", None, "batch", "heads", None, None)),
+            "conv": ((G, P, batch, d.conv_k - 1, d.conv_dim),
+                     ("layer", None, "batch", None, "mlp")),
+            "k_sh": ((G, batch, max_len, KV, hd), ("layer",) + dt),
+            "v_sh": ((G, batch, max_len, KV, hd), ("layer",) + dt),
+        }
+        if cfg.n_zamba_tail > 0:
+            ent["h_tail"] = ((cfg.n_zamba_tail, batch, d.n_heads, d.state,
+                              d.head_dim), ("layer", "batch", "heads", None, None))
+            ent["conv_tail"] = ((cfg.n_zamba_tail, batch, d.conv_k - 1,
+                                 d.conv_dim), ("layer", "batch", None, "mlp"))
+        return ent
+    if fam == "encdec":
+        Tf = cfg.n_frontend_tokens
+        return {"k": ((L, batch, max_len, KV, hd), ("layer",) + dt),
+                "v": ((L, batch, max_len, KV, hd), ("layer",) + dt),
+                "xk": ((L, batch, Tf, KV, hd), ("layer",) + dt),
+                "xv": ((L, batch, Tf, KV, hd), ("layer",) + dt)}
+    raise ValueError(fam)
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int):
+    dt = cfg.compute_dtype
+    return {k: jax.ShapeDtypeStruct(shp, dt)
+            for k, (shp, _) in cache_entries(cfg, batch, max_len).items()}
+
+
+def cache_logical_axes(cfg: ModelConfig, batch: int, max_len: int):
+    return {k: ax for k, (shp, ax) in cache_entries(cfg, batch, max_len).items()}
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Cache:
+    return {k: jnp.zeros(s.shape, s.dtype)
+            for k, s in cache_specs(cfg, batch, max_len).items()}
+
+
+# ---------------------------------------------------------------------------
+# Decode helpers
+# ---------------------------------------------------------------------------
+
+
+def _project_qkv(p, x, cfg: ModelConfig):
+    B = x.shape[0]
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    h = rms_norm(x, p["ln1"])
+    q = jnp.einsum("bsd,dh->bsh", h, p["wq"].astype(x.dtype))
+    kv = jnp.einsum("bsd,dh->bsh", h, p["wkv"].astype(x.dtype))
+    q = q.reshape(B, -1, H, hd)
+    kv = kv.reshape(B, -1, 2, KV, hd)
+    return h, q, kv[:, :, 0], kv[:, :, 1]
+
+
+def _attn_decode(p, x, k_cache, v_cache, lengths, cfg: ModelConfig,
+                 window: int = 0, ring: bool = False):
+    """One-token attention vs cache; returns (attn_out, k_cache', v_cache')."""
+    B = x.shape[0]
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    _, q, k_new, v_new = _project_qkv(p, x, cfg)
+    pos = lengths[:, None]                                    # (B,1)
+    q = rope(q, pos, cfg.rope_theta)[:, 0]                    # (B,H,hd)
+    k_new = rope(k_new, pos, cfg.rope_theta)[:, 0]            # (B,KV,hd)
+    v_new = v_new[:, 0]
+    W = k_cache.shape[1]
+    slot = (lengths % W) if ring else jnp.minimum(lengths, W - 1)
+    bidx = jnp.arange(B)
+    k_cache = k_cache.at[bidx, slot].set(k_new.astype(k_cache.dtype))
+    v_cache = v_cache.at[bidx, slot].set(v_new.astype(v_cache.dtype))
+    eff_len = jnp.minimum(lengths + 1, W) if ring else jnp.minimum(lengths + 1, W)
+    o = decode_attention(q, k_cache, v_cache, eff_len,
+                         window=0 if ring else window, cap=cfg.attn_softcap)
+    out = jnp.einsum("bh,hd->bd", o.reshape(B, H * hd),
+                     p["wo"].astype(x.dtype))
+    return out[:, None, :], k_cache, v_cache
+
+
+def _mlp_decode(p, x, cfg: ModelConfig):
+    return swiglu(rms_norm(x, p["ln2"]), p["w_gate"].astype(x.dtype),
+                  p["w_up"].astype(x.dtype), p["w_down"].astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# decode_step per family
+# ---------------------------------------------------------------------------
+
+
+def decode_step(params: Dict[str, jnp.ndarray], cfg: ModelConfig,
+                cache: Cache, tokens: jnp.ndarray, lengths: jnp.ndarray
+                ) -> Tuple[Cache, jnp.ndarray]:
+    """tokens (B,1), lengths (B,) -> (cache', logits (B,vocab))."""
+    x = _embed_tokens(params, cfg, tokens)
+    fam = cfg.family
+    new_cache = dict(cache)
+
+    if fam in ("dense", "moe", "vlm"):
+        stack = _sub(params, "blocks.")
+
+        def body(h, xs):
+            p, kc, vc = xs
+            a, kc, vc = _attn_decode(p, h, kc, vc, lengths, cfg)
+            h = h + a
+            if fam == "moe":
+                # dropless at decode: capacity = token count
+                m, _ = moe_ffn(_sub(p, "moe_"), rms_norm(h, p["ln2"]),
+                               cfg.moe_dims, capacity=h.shape[0])
+                if cfg.dense_residual:
+                    hh = rms_norm(h, p["ln2"])
+                    m = m + swiglu(hh, p["res_w_gate"].astype(h.dtype),
+                                   p["res_w_up"].astype(h.dtype),
+                                   p["res_w_down"].astype(h.dtype))
+                h = h + m
+            else:
+                h = h + _mlp_decode(p, h, cfg)
+            return h, (kc, vc)
+
+        x, (k_new, v_new) = jax.lax.scan(body, x, (stack, cache["k"], cache["v"]))
+        new_cache["k"], new_cache["v"] = k_new, v_new
+
+    elif fam == "gemma2":
+        stack = _sub(params, "blocks.")
+        even = {k: v[0::2] for k, v in stack.items()}   # local layers
+        odd = {k: v[1::2] for k, v in stack.items()}    # global layers
+
+        def pair(h, xs):
+            pe, po, klc, vlc, kgc, vgc = xs
+            a, klc, vlc = _attn_decode(pe, h, klc, vlc, lengths, cfg, ring=True)
+            h = h + rms_norm(a, pe["ln1_post"])
+            m = _mlp_decode(pe, h, cfg)
+            h = h + rms_norm(m, pe["ln2_post"])
+            a, kgc, vgc = _attn_decode(po, h, kgc, vgc, lengths, cfg)
+            h = h + rms_norm(a, po["ln1_post"])
+            m = _mlp_decode(po, h, cfg)
+            h = h + rms_norm(m, po["ln2_post"])
+            return h, (klc, vlc, kgc, vgc)
+
+        x, (kl, vl, kg, vg) = jax.lax.scan(
+            pair, x, (even, odd, cache["k_loc"], cache["v_loc"],
+                      cache["k_glob"], cache["v_glob"]))
+        new_cache.update(k_loc=kl, v_loc=vl, k_glob=kg, v_glob=vg)
+
+    elif fam == "mamba2":
+        stack = _sub(params, "blocks.")
+
+        def body(h, xs):
+            p, hs, cs = xs
+            y, st = mamba2_decode(p, h, {"h": hs, "conv": cs}, cfg.ssm_dims)
+            return h + y, (st["h"], st["conv"])
+
+        x, (hs, cs) = jax.lax.scan(body, x, (stack, cache["h"], cache["conv"]))
+        new_cache["h"], new_cache["conv"] = hs, cs
+
+    elif fam == "zamba2":
+        shared = _sub(params, "shared.")
+        groups = _sub(params, "blocks.")
+        gate = params["gate"]
+
+        def group(h, xs):
+            gp, g, hs, cs, ksh, vsh = xs
+
+            def inner(hh, ys):
+                p, hsi, csi = ys
+                y, st = mamba2_decode(p, hh, {"h": hsi, "conv": csi}, cfg.ssm_dims)
+                return hh + y, (st["h"], st["conv"])
+            h, (hs, cs) = jax.lax.scan(inner, h, (gp, hs, cs))
+            a, ksh, vsh = _attn_decode(shared, h, ksh, vsh, lengths, cfg)
+            sh = h + a
+            sh = sh + _mlp_decode(shared, sh, cfg)
+            h = h + jax.nn.sigmoid(g.astype(jnp.float32)).astype(h.dtype)[None, None, :] * (sh - h)
+            return h, (hs, cs, ksh, vsh)
+
+        x, (hs, cs, ksh, vsh) = jax.lax.scan(
+            group, x, (groups, gate, cache["h"], cache["conv"],
+                       cache["k_sh"], cache["v_sh"]))
+        new_cache.update(h=hs, conv=cs, k_sh=ksh, v_sh=vsh)
+        if cfg.n_zamba_tail > 0:
+            tail = _sub(params, "tail.")
+            tail = {k: v[:cfg.n_zamba_tail] for k, v in tail.items()}
+
+            def tbody(h, xs):
+                p, hsi, csi = xs
+                y, st = mamba2_decode(p, h, {"h": hsi, "conv": csi}, cfg.ssm_dims)
+                return h + y, (st["h"], st["conv"])
+            x, (ht, ct) = jax.lax.scan(tbody, x, (tail, cache["h_tail"],
+                                                  cache["conv_tail"]))
+            new_cache["h_tail"], new_cache["conv_tail"] = ht, ct
+
+    elif fam == "encdec":
+        stack = _sub(params, "dec.")
+
+        def body(h, xs):
+            p, kc, vc, xk, xv = xs
+            a, kc, vc = _attn_decode(p, h, kc, vc, lengths, cfg)
+            h = h + a
+            # cross attention against precomputed encoder K/V
+            B = h.shape[0]
+            H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+            hq = rms_norm(h, p["lnx"])
+            q = jnp.einsum("bsd,dh->bsh", hq, p["xq"].astype(h.dtype))
+            q = q.reshape(B, H, hd)
+            Tf = xk.shape[1]
+            o = decode_attention(q, xk, xv,
+                                 jnp.full((B,), Tf, jnp.int32))
+            h = h + jnp.einsum("bh,hd->bd", o.reshape(B, H * hd),
+                               p["xo"].astype(h.dtype))[:, None]
+            h = h + _mlp_decode(p, h, cfg)
+            return h, (kc, vc)
+
+        x, (k_new, v_new) = jax.lax.scan(
+            body, x, (stack, cache["k"], cache["v"], cache["xk"], cache["xv"]))
+        new_cache["k"], new_cache["v"] = k_new, v_new
+
+    else:
+        raise ValueError(fam)
+
+    x = rms_norm(x, params["final_norm"])
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(x.dtype))[:, 0]
+    logits = softcap(logits.astype(jnp.float32), cfg.final_softcap)
+    return new_cache, logits
+
+
+# ---------------------------------------------------------------------------
+# Prefill (inference forward producing logits; KV population for encdec cross)
+# ---------------------------------------------------------------------------
+
+
+def prefill_step(params: Dict[str, jnp.ndarray], cfg: ModelConfig,
+                 batch: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+    """Inference prefill: full-sequence forward -> last-token logits (B, V).
+
+    Lowered for the ``prefill_32k`` cells.  The KV-cache write-out (a pure
+    store of the per-layer K/V activations) is accounted analytically in the
+    roofline notes; XLA fuses it with the projection when caches are threaded
+    (decode cells size the caches explicitly).
+    """
+    from .transformer import forward_hidden
+    x, _ = forward_hidden(params, cfg, batch)
+    last = x[:, -1, :]
+    logits = jnp.einsum("bd,vd->bv", last, params["embed"].astype(x.dtype))
+    return softcap(logits.astype(jnp.float32), cfg.final_softcap)

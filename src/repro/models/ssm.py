@@ -1,0 +1,193 @@
+"""Mamba-2 (SSD — state-space duality) block: chunked train scan + O(1) decode.
+
+The SSD form (Dao & Gu, arXiv:2405.21060) splits the sequence into chunks of
+length ``Q``: inside a chunk the recurrence is evaluated as a masked
+decay-weighted attention-like product (MXU-dense), and a ``lax.scan`` carries
+the (H, N, P) state across chunks.  Per-chunk work is materialised one chunk
+at a time inside the scan (never the full (S/Q, Q, Q) tensor), so memory is
+O(B·H·Q²) transient — the TPU-native tiling of the SSD algorithm.
+
+Decode is the plain recurrence: ``h = a·h + B⊗(dt·x)``, ``y = C·h`` — state is
+O(B·H·N·P) regardless of context length, which is why the ``long_500k`` cell
+runs for the SSM/hybrid archs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import rms_norm
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMDims:
+    d_model: int
+    d_inner: int     # 2 * d_model (mamba expand=2)
+    n_heads: int     # d_inner // head_dim
+    head_dim: int    # P
+    state: int       # N
+    conv_k: int = 4
+
+    @property
+    def conv_dim(self) -> int:
+        return self.d_inner + 2 * self.state  # x, B, C share the conv
+
+    @property
+    def in_proj_dim(self) -> int:
+        # z, x, B, C, dt
+        return 2 * self.d_inner + 2 * self.state + self.n_heads
+
+
+def ssm_param_shapes(dims: SSMDims) -> Dict[str, Tuple[int, ...]]:
+    return {
+        "norm": (dims.d_model,),
+        "in_proj": (dims.d_model, dims.in_proj_dim),
+        "conv_w": (dims.conv_k, dims.conv_dim),
+        "conv_b": (dims.conv_dim,),
+        "A_log": (dims.n_heads,),
+        "D": (dims.n_heads,),
+        "dt_bias": (dims.n_heads,),
+        "out_norm": (dims.d_inner,),
+        "out_proj": (dims.d_inner, dims.d_model),
+    }
+
+
+def _split_proj(dims: SSMDims, zxbcdt: jnp.ndarray):
+    di, n, h = dims.d_inner, dims.state, dims.n_heads
+    z = zxbcdt[..., :di]
+    x = zxbcdt[..., di:2 * di]
+    B = zxbcdt[..., 2 * di:2 * di + n]
+    C = zxbcdt[..., 2 * di + n:2 * di + 2 * n]
+    dt = zxbcdt[..., 2 * di + 2 * n:]
+    return z, x, B, C, dt
+
+
+def _causal_conv(xbc: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 state: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv1d; returns (out, new_state). xbc (B,S,C)."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((xbc.shape[0], k - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = state
+    xp = jnp.concatenate([pad, xbc], axis=1)
+    out = jnp.zeros_like(xbc, dtype=jnp.float32)
+    for i in range(k):
+        out = out + xp[:, i:i + xbc.shape[1], :].astype(jnp.float32) * w[i][None, None, :]
+    out = jax.nn.silu(out + b[None, None, :])
+    new_state = xp[:, xp.shape[1] - (k - 1):, :]
+    return out.astype(xbc.dtype), new_state
+
+
+def ssd_chunked(u: jnp.ndarray, log_a: jnp.ndarray, B: jnp.ndarray,
+                C: jnp.ndarray, chunk: int = 128,
+                h0: Optional[jnp.ndarray] = None):
+    """SSD scan. u (B,S,H,P), log_a (B,S,H), B/C (B,S,N) -> y, h_final."""
+    Bsz, S, H, P = u.shape
+    N = B.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+    u_c = u.reshape(Bsz, nc, Q, H, P)
+    la_c = jnp.cumsum(log_a.reshape(Bsz, nc, Q, H), axis=2)  # (B,nc,Q,H)
+    B_c = B.reshape(Bsz, nc, Q, N)
+    C_c = C.reshape(Bsz, nc, Q, N)
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, H, N, P), jnp.float32)
+
+    idx = jnp.arange(Q)
+    tri = idx[:, None] >= idx[None, :]          # i >= j
+
+    def chunk_step(h_prev, inp):
+        uc, lac, bc, cc = inp                    # (B,Q,H,P) (B,Q,H) (B,Q,N) (B,Q,N)
+        lac = lac.astype(jnp.float32)
+        # intra-chunk: masked decay-weighted "attention"
+        g = jnp.einsum("bin,bjn->bij", cc.astype(jnp.float32),
+                       bc.astype(jnp.float32))                     # (B,Q,Q)
+        # mask the EXPONENT, not the result: exp of the (positive) upper
+        # triangle overflows and poisons the backward pass with inf*0 NaNs
+        diff = lac[:, :, None, :] - lac[:, None, :, :]             # (B,Qi,Qj,H)
+        diff = jnp.where(tri[None, :, :, None], diff, -1e30)
+        dec = jnp.exp(diff)
+        y_in = jnp.einsum("bij,bijh,bjhp->bihp", g, dec,
+                          uc.astype(jnp.float32))
+        # inter-chunk: contribution of the carried state
+        y_x = jnp.einsum("bin,bih,bhnp->bihp", cc.astype(jnp.float32),
+                         jnp.exp(lac), h_prev)
+        # state update
+        la_end = lac[:, -1:, :]                                    # (B,1,H)
+        w = jnp.exp(la_end - lac)                                  # (B,Q,H)
+        s_new = jnp.einsum("bjn,bjh,bjhp->bhnp", bc.astype(jnp.float32), w,
+                           uc.astype(jnp.float32))
+        h = jnp.exp(la_end[:, 0, :])[:, :, None, None] * h_prev + s_new
+        return h, (y_in + y_x)
+
+    step = jax.checkpoint(chunk_step,
+                          policy=jax.checkpoint_policies.nothing_saveable)
+    h_fin, ys = jax.lax.scan(
+        step, h0,
+        (u_c.transpose(1, 0, 2, 3, 4), la_c.transpose(1, 0, 2, 3),
+         B_c.transpose(1, 0, 2, 3), C_c.transpose(1, 0, 2, 3)))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(Bsz, S, H, P)
+    return y, h_fin
+
+
+def mamba2_block(params: Dict[str, jnp.ndarray], x: jnp.ndarray,
+                 dims: SSMDims, chunk: int = 128) -> jnp.ndarray:
+    """Training/prefill forward. x (B,S,d) -> (B,S,d)."""
+    Bsz, S, _ = x.shape
+    h = rms_norm(x, params["norm"])
+    zxbcdt = jnp.einsum("bsd,de->bse", h, params["in_proj"].astype(h.dtype))
+    z, xs, Bc, Cc, dt = _split_proj(dims, zxbcdt)
+    xbc = jnp.concatenate([xs, Bc, Cc], axis=-1)
+    xbc, _ = _causal_conv(xbc, params["conv_w"].astype(jnp.float32),
+                          params["conv_b"].astype(jnp.float32))
+    xs = xbc[..., :dims.d_inner]
+    Bc = xbc[..., dims.d_inner:dims.d_inner + dims.state]
+    Cc = xbc[..., dims.d_inner + dims.state:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) +
+                         params["dt_bias"][None, None, :].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    log_a = dt * A[None, None, :]                                   # (B,S,H)
+    xh = xs.reshape(Bsz, S, dims.n_heads, dims.head_dim)
+    u = xh.astype(jnp.float32) * dt[..., None]
+    y, _ = ssd_chunked(u, log_a, Bc, Cc, chunk=chunk)
+    y = y + params["D"].astype(jnp.float32)[None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(Bsz, S, dims.d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["out_norm"])
+    return jnp.einsum("bse,ed->bsd", y, params["out_proj"].astype(x.dtype))
+
+
+def mamba2_decode(params: Dict[str, jnp.ndarray], x_tok: jnp.ndarray,
+                  state: Dict[str, jnp.ndarray], dims: SSMDims
+                  ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """One-token decode. x_tok (B,1,d); state = {"h": (B,H,N,P), "conv": (B,k-1,conv_dim)}."""
+    h_in = rms_norm(x_tok, params["norm"])
+    zxbcdt = jnp.einsum("bsd,de->bse", h_in, params["in_proj"].astype(x_tok.dtype))
+    z, xs, Bc, Cc, dt = _split_proj(dims, zxbcdt)
+    xbc = jnp.concatenate([xs, Bc, Cc], axis=-1)
+    xbc, conv_state = _causal_conv(xbc, params["conv_w"].astype(jnp.float32),
+                                   params["conv_b"].astype(jnp.float32),
+                                   state["conv"])
+    xs = xbc[..., :dims.d_inner]
+    Bc = xbc[..., dims.d_inner:dims.d_inner + dims.state]
+    Cc = xbc[..., dims.d_inner + dims.state:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) +
+                         params["dt_bias"][None, None, :].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    a = jnp.exp(dt * A[None, None, :])[:, 0]                        # (B,H)
+    xh = xs.reshape(xs.shape[0], 1, dims.n_heads, dims.head_dim)
+    u = (xh.astype(jnp.float32) * dt[..., None])[:, 0]              # (B,H,P)
+    h = state["h"] * a[:, :, None, None] + jnp.einsum(
+        "bn,bhp->bhnp", Bc[:, 0].astype(jnp.float32), u)
+    y = jnp.einsum("bn,bhnp->bhp", Cc[:, 0].astype(jnp.float32), h)
+    y = y + params["D"].astype(jnp.float32)[None, :, None] * xh[:, 0].astype(jnp.float32)
+    y = y.reshape(y.shape[0], 1, dims.d_inner).astype(x_tok.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["out_norm"])
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"].astype(x_tok.dtype))
+    return out, {"h": h, "conv": conv_state}

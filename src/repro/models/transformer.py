@@ -1,0 +1,569 @@
+"""Model assembly: all 10 assigned architectures from one block library.
+
+Families:
+* ``dense``   — pre-norm GQA transformer (minitron / granite / mistral-large)
+* ``gemma2``  — alternating local(sliding-window)/global attention, logit
+                softcaps, pre+post sublayer norms, embedding scaling
+* ``moe``     — dense attention + top-k expert FFN (phi3.5-moe / arctic;
+                arctic adds a parallel dense-residual FFN)
+* ``mamba2``  — attention-free SSD stack
+* ``zamba2``  — mamba2 backbone with a single *shared* attention+MLP block
+                applied after every ``mamba_per_attn`` SSM layers
+* ``encdec``  — whisper-style encoder-decoder (conv/audio frontend stubbed:
+                the encoder consumes precomputed frame embeddings)
+* ``vlm``     — paligemma: patch-embedding stub prefix (bidirectional prefix
+                attention) + gemma-style decoder
+
+Everything that repeats is ``lax.scan``'d over stacked parameters (HLO stays
+O(1) in depth — essential for 33-cell × 2-mesh dry-run compile times), with
+``jax.checkpoint`` on the block body when ``cfg.remat``.
+
+Params are plain pytrees; ``param_specs`` returns ShapeDtypeStructs (the
+dry-run lowers against these — no allocation), ``init_params`` materialises
+them, and ``logical_axes`` returns the same-structure sharding names consumed
+by :mod:`repro.launch.sharding`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import (decode_attention, fit_chunk, flash_attention,
+                     flash_attention_cv, rms_norm, rope, shard_activations,
+                     shard_logits, softcap, swiglu)
+from .moe import MoEDims, moe_ffn, moe_ffn_auto, moe_param_shapes
+from .ssm import (SSMDims, mamba2_block, mamba2_decode, ssm_param_shapes)
+
+PAD_ID = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    rope_theta: float = 10000.0
+    attn_softcap: float = 0.0
+    final_softcap: float = 0.0
+    window: int = 0
+    n_experts: int = 0
+    top_k: int = 0
+    moe_dff: int = 0
+    moe_capacity_factor: float = 1.25
+    dense_residual: bool = False
+    ssm_state: int = 0
+    ssm_headdim: int = 64
+    mamba_per_attn: int = 0
+    frontend: str = "none"            # "none" | "audio" | "patch"
+    n_frontend_tokens: int = 0
+    encdec: bool = False
+    n_enc_layers: int = 0
+    prefix_len: int = 0
+    embed_scale: bool = False
+    remat: bool = True
+    q_chunk: int = 256
+    kv_chunk: int = 512
+    ssd_chunk: int = 128
+    loss_chunk: int = 512
+    dtype: str = "bfloat16"
+
+    @property
+    def compute_dtype(self):
+        return jnp.bfloat16 if self.dtype == "bfloat16" else jnp.float32
+
+    @property
+    def sub_quadratic(self) -> bool:
+        return self.family in ("mamba2", "zamba2", "gemma2")
+
+    @property
+    def ssm_dims(self) -> SSMDims:
+        d_inner = 2 * self.d_model
+        return SSMDims(self.d_model, d_inner, d_inner // self.ssm_headdim,
+                       self.ssm_headdim, self.ssm_state)
+
+    @property
+    def moe_dims(self) -> MoEDims:
+        return MoEDims(self.d_model, self.n_experts, self.top_k, self.moe_dff,
+                       self.moe_capacity_factor)
+
+    @property
+    def n_zamba_groups(self) -> int:
+        return self.n_layers // (self.mamba_per_attn + 1)
+
+    @property
+    def n_zamba_tail(self) -> int:
+        return self.n_layers - self.n_zamba_groups * (self.mamba_per_attn + 1)
+
+
+# ---------------------------------------------------------------------------
+# Parameter shapes / logical sharding axes
+# ---------------------------------------------------------------------------
+
+
+def _attn_shapes(cfg: ModelConfig) -> Dict[str, Tuple[Tuple[int, ...], Tuple[str, ...]]]:
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    return {
+        "ln1": ((d,), ("embed",)),
+        "wq": ((d, H * hd), ("embed", "heads")),
+        "wkv": ((d, 2 * KV * hd), ("embed", "heads")),
+        "wo": ((H * hd, d), ("heads", "embed")),
+    }
+
+
+def _mlp_shapes(cfg: ModelConfig, ff: Optional[int] = None):
+    d = cfg.d_model
+    f = ff if ff is not None else cfg.d_ff
+    return {
+        "ln2": ((d,), ("embed",)),
+        "w_gate": ((d, f), ("embed", "mlp")),
+        "w_up": ((d, f), ("embed", "mlp")),
+        "w_down": ((f, d), ("mlp", "embed")),
+    }
+
+
+def _block_shapes(cfg: ModelConfig) -> Dict[str, Tuple[Tuple[int, ...], Tuple[str, ...]]]:
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        return {**_attn_shapes(cfg), **_mlp_shapes(cfg)}
+    if fam == "gemma2":
+        out = {**_attn_shapes(cfg), **_mlp_shapes(cfg)}
+        out["ln1_post"] = ((cfg.d_model,), ("embed",))
+        out["ln2_post"] = ((cfg.d_model,), ("embed",))
+        return out
+    if fam == "moe":
+        out = {**_attn_shapes(cfg)}
+        out["ln2"] = ((cfg.d_model,), ("embed",))
+        md = cfg.moe_dims
+        for k, shp in moe_param_shapes(md).items():
+            ax = {"router": ("embed", "experts"),
+                  "w_gate": ("experts", "embed", "mlp"),
+                  "w_up": ("experts", "embed", "mlp"),
+                  "w_down": ("experts", "mlp", "embed")}[k]
+            out[f"moe_{k}"] = (shp, ax)
+        if cfg.dense_residual:
+            for k, (shp, ax) in _mlp_shapes(cfg, cfg.d_ff).items():
+                out[f"res_{k}"] = (shp, ax)
+        return out
+    if fam == "mamba2":
+        dims = cfg.ssm_dims
+        ax = {"norm": ("embed",), "in_proj": ("embed", "mlp"),
+              "conv_w": (None, "mlp"), "conv_b": ("mlp",),
+              "A_log": ("heads",), "D": ("heads",), "dt_bias": ("heads",),
+              "out_norm": ("mlp",), "out_proj": ("mlp", "embed")}
+        return {k: (shp, ax[k]) for k, shp in ssm_param_shapes(dims).items()}
+    if fam == "encdec":
+        out = {**_attn_shapes(cfg), **_mlp_shapes(cfg)}
+        # cross attention (decoder only; encoder stack ignores these)
+        out["lnx"] = ((cfg.d_model,), ("embed",))
+        out["xq"] = ((cfg.d_model, cfg.n_heads * cfg.head_dim), ("embed", "heads"))
+        out["xkv"] = ((cfg.d_model, 2 * cfg.n_kv_heads * cfg.head_dim), ("embed", "heads"))
+        out["xo"] = ((cfg.n_heads * cfg.head_dim, cfg.d_model), ("heads", "embed"))
+        return out
+    raise ValueError(fam)
+
+
+def _stack(shapes: Dict[str, Tuple[Tuple[int, ...], Tuple[str, ...]]], n: int):
+    specs = {k: ((n,) + shp, ("layer",) + tuple(a if a is not None else None
+                                                for a in ax))
+             for k, (shp, ax) in shapes.items()}
+    return specs
+
+
+def param_entries(cfg: ModelConfig) -> Dict[str, Tuple[Tuple[int, ...], Tuple[Optional[str], ...]]]:
+    """name -> (shape, logical axes) for every parameter."""
+    d = cfg.d_model
+    out: Dict[str, Tuple[Tuple[int, ...], Tuple[Optional[str], ...]]] = {
+        "embed": ((cfg.vocab, d), ("vocab", "embed")),
+        "final_norm": ((d,), ("embed",)),
+    }
+    fam = cfg.family
+    if fam == "zamba2":
+        dims = cfg.ssm_dims
+        ssm = {k: (shp, {"norm": ("embed",), "in_proj": ("embed", "mlp"),
+                         "conv_w": (None, "mlp"), "conv_b": ("mlp",),
+                         "A_log": ("heads",), "D": ("heads",),
+                         "dt_bias": ("heads",), "out_norm": ("mlp",),
+                         "out_proj": ("mlp", "embed")}[k])
+               for k, shp in ssm_param_shapes(dims).items()}
+        G, P = cfg.n_zamba_groups, cfg.mamba_per_attn
+        for k, (shp, ax) in ssm.items():
+            out[f"blocks.{k}"] = ((G, P) + shp, ("layer", None) + ax)
+        for k, (shp, ax) in ssm.items():
+            out[f"tail.{k}"] = ((max(cfg.n_zamba_tail, 1),) + shp, ("layer",) + ax)
+        shared = {**_attn_shapes(cfg), **_mlp_shapes(cfg)}
+        for k, (shp, ax) in shared.items():
+            out[f"shared.{k}"] = (shp, ax)
+        out["gate"] = ((G, d), ("layer", "embed"))
+        return out
+    if fam == "encdec":
+        blk = _block_shapes(cfg)
+        for k, (shp, ax) in _stack(blk, cfg.n_layers).items():
+            out[f"dec.{k}"] = (shp, ax)
+        enc_blk = {**_attn_shapes(cfg), **_mlp_shapes(cfg)}
+        for k, (shp, ax) in _stack(enc_blk, cfg.n_enc_layers).items():
+            out[f"enc.{k}"] = (shp, ax)
+        out["enc_final_norm"] = ((d,), ("embed",))
+        return out
+    blk = _block_shapes(cfg)
+    for k, (shp, ax) in _stack(blk, cfg.n_layers).items():
+        out[f"blocks.{k}"] = (shp, ax)
+    return out
+
+
+def param_specs(cfg: ModelConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+    return {k: jax.ShapeDtypeStruct(shp, jnp.float32)
+            for k, (shp, _) in param_entries(cfg).items()}
+
+
+def logical_axes(cfg: ModelConfig) -> Dict[str, Tuple[Optional[str], ...]]:
+    return {k: ax for k, (shp, ax) in param_entries(cfg).items()}
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> Dict[str, jnp.ndarray]:
+    rng = np.random.default_rng(seed)
+    out = {}
+    for k, (shp, _) in param_entries(cfg).items():
+        if any(t in k for t in ("ln", "norm", "gate")) and len(shp) <= 2 and "w_" not in k:
+            out[k] = jnp.zeros(shp, jnp.float32)
+        elif k.endswith("A_log"):
+            out[k] = jnp.asarray(np.log(rng.uniform(1, 16, shp)), jnp.float32)
+        elif k.endswith(("D", "dt_bias", "conv_b")):
+            out[k] = jnp.zeros(shp, jnp.float32)
+        else:
+            fan_in = shp[-2] if len(shp) >= 2 else shp[-1]
+            out[k] = jnp.asarray(
+                rng.standard_normal(shp) / np.sqrt(max(fan_in, 1)), jnp.float32)
+    return out
+
+
+def _sub(params: Dict[str, jnp.ndarray], prefix: str) -> Dict[str, jnp.ndarray]:
+    pl = len(prefix)
+    return {k[pl:]: v for k, v in params.items() if k.startswith(prefix)}
+
+
+# ---------------------------------------------------------------------------
+# Blocks (training / prefill forward)
+# ---------------------------------------------------------------------------
+
+
+def _constrain_heads(x: jnp.ndarray) -> jnp.ndarray:
+    """(B, S, H, D) attention activations: batch->data, heads->model."""
+    try:
+        am = jax.sharding.get_abstract_mesh()
+    except Exception:
+        return x
+    if am is None or not getattr(am, "axis_names", ()):
+        return x
+    axes = am.axis_names
+    da = tuple(a for a in ("pod", "data") if a in axes)
+    da_n = int(np.prod([am.shape[a] for a in da])) if da else 1
+    mo_n = am.shape["model"] if "model" in axes else 1
+    parts: list = [None, None, None, None]
+    if da and x.shape[0] % da_n == 0 and da_n > 1:
+        parts[0] = da if len(da) > 1 else da[0]
+    if "model" in axes and x.shape[2] % mo_n == 0 and mo_n > 1:
+        parts[2] = "model"
+    if all(p is None for p in parts):
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.PartitionSpec(*parts))
+
+
+def _attention_sublayer(p, x, cfg: ModelConfig, positions, *, causal=True,
+                        window=0, prefix_len=0, context=None):
+    B, S, d = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    h = rms_norm(x, p["ln1" if context is None else "lnx"])
+    wq = p["wq" if context is None else "xq"].astype(x.dtype)
+    wkv = p["wkv" if context is None else "xkv"].astype(x.dtype)
+    wo = p["wo" if context is None else "xo"].astype(x.dtype)
+    q = jnp.einsum("bsd,dh->bsh", h, wq).reshape(B, S, H, hd)
+    src = h if context is None else context
+    kv = jnp.einsum("bsd,dh->bsh", src, wkv).reshape(B, src.shape[1], 2, KV, hd)
+    k, v = kv[:, :, 0], kv[:, :, 1]
+    if context is None:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    if KV != H:
+        # repeat K/V to full head count: a single H-sized head axis shards
+        # cleanly over "model" (KV=8 / G=4 both < 16 cannot), removing every
+        # cross-model collective inside the attention loops (§Perf iter 3)
+        k = jnp.repeat(k, H // KV, axis=2)
+        v = jnp.repeat(v, H // KV, axis=2)
+    q = _constrain_heads(q)
+    k = _constrain_heads(k)
+    v = _constrain_heads(v)
+    T = k.shape[1]
+    o = flash_attention_cv(q, k, v, bool(causal and context is None),
+                           int(window or 0), float(cfg.attn_softcap),
+                           fit_chunk(S, cfg.q_chunk),
+                           fit_chunk(T, cfg.kv_chunk), int(prefix_len))
+    out = jnp.einsum("bsh,hd->bsd", o.reshape(B, S, H * hd), wo)
+    # requesting the row-parallel product in the seq-sharded layout turns the
+    # TP all-reduce into a reduce-scatter (Megatron-SP; §Perf iter 4)
+    return shard_activations(out.astype(x.dtype))
+
+
+def _dense_block(p, x, cfg: ModelConfig, positions, window=0, prefix_len=0):
+    a = _attention_sublayer(p, x, cfg, positions, window=window,
+                            prefix_len=prefix_len)
+    if cfg.family == "gemma2":
+        a = rms_norm(a, p["ln1_post"])
+    x = x + a
+    h = rms_norm(x, p["ln2"])
+    m = swiglu(h, p["w_gate"].astype(x.dtype), p["w_up"].astype(x.dtype),
+               p["w_down"].astype(x.dtype))
+    m = shard_activations(m.astype(x.dtype))   # RS for the MLP row-parallel
+    if cfg.family == "gemma2":
+        m = rms_norm(m, p["ln2_post"])
+    return x + m
+
+
+def _moe_block(p, x, cfg: ModelConfig, positions):
+    x = x + _attention_sublayer(p, x, cfg, positions)
+    h = rms_norm(x, p["ln2"])
+    moe_out, aux = moe_ffn_auto(_sub(p, "moe_"), h, cfg.moe_dims)
+    out = moe_out
+    if cfg.dense_residual:
+        out = out + swiglu(h, p["res_w_gate"].astype(x.dtype),
+                           p["res_w_up"].astype(x.dtype),
+                           p["res_w_down"].astype(x.dtype))
+    return x + out, aux
+
+
+# ---------------------------------------------------------------------------
+# Full forward (training)
+# ---------------------------------------------------------------------------
+
+
+def _embed_tokens(params, cfg: ModelConfig, tokens):
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.compute_dtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), cfg.compute_dtype)
+    return x
+
+
+def _maybe_remat(f, cfg: ModelConfig):
+    return jax.checkpoint(f) if cfg.remat else f
+
+
+def _scan_blocks(params_prefix, x, cfg: ModelConfig, positions, body):
+    stacked = params_prefix
+    fn = _maybe_remat(body, cfg)
+
+    def step(carry, layer_params):
+        carry = shard_activations(carry)
+        return fn(carry, layer_params), None
+
+    x, _ = jax.lax.scan(step, x, stacked)
+    return x
+
+
+def forward_hidden(params: Dict[str, jnp.ndarray], cfg: ModelConfig,
+                   batch: Dict[str, jnp.ndarray]) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Backbone forward: returns (final hidden (B,S,d), moe aux loss)."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    aux_total = jnp.zeros((), jnp.float32)
+
+    if cfg.family == "encdec":
+        enc_x = batch["frontend"].astype(cfg.compute_dtype)   # (B,Tf,d)
+        enc_pos = jnp.broadcast_to(jnp.arange(enc_x.shape[1])[None], enc_x.shape[:2])
+        enc_stack = _sub(params, "enc.")
+
+        def enc_body(h, p):
+            return _dense_block(p, h, cfg, enc_pos, window=0)
+        enc_x = _scan_blocks(enc_stack, enc_x, cfg, enc_pos, enc_body)
+        enc_out = rms_norm(enc_x, params["enc_final_norm"])
+
+        x = _embed_tokens(params, cfg, tokens)
+        pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        dec_stack = _sub(params, "dec.")
+
+        def dec_body(h, p):
+            h = h + _attention_sublayer(p, h, cfg, pos, causal=True)
+            h = h + _attention_sublayer(p, h, cfg, pos, context=enc_out)
+            m = swiglu(rms_norm(h, p["ln2"]), p["w_gate"].astype(h.dtype),
+                       p["w_up"].astype(h.dtype), p["w_down"].astype(h.dtype))
+            return h + m
+        x = _scan_blocks(dec_stack, x, cfg, pos, dec_body)
+
+    elif cfg.family == "vlm":
+        fe = batch["frontend"].astype(cfg.compute_dtype)      # (B,Np,d)
+        text = _embed_tokens(params, cfg, tokens)
+        x = jnp.concatenate([fe, text], axis=1)
+        S = x.shape[1]
+        pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        stack = _sub(params, "blocks.")
+
+        def body(h, p):
+            return _dense_block(p, h, cfg, pos, prefix_len=cfg.prefix_len)
+        x = _scan_blocks(stack, x, cfg, pos, body)
+
+    elif cfg.family == "mamba2":
+        x = _embed_tokens(params, cfg, tokens)
+        stack = _sub(params, "blocks.")
+
+        def body(h, p):
+            return h + mamba2_block(p, h, cfg.ssm_dims, chunk=cfg.ssd_chunk)
+        x = _scan_blocks(stack, x, cfg, None, body)
+
+    elif cfg.family == "zamba2":
+        x = _embed_tokens(params, cfg, tokens)
+        pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        shared = _sub(params, "shared.")
+        groups = _sub(params, "blocks.")
+        gate = params["gate"]
+
+        def group_body(h, gp):
+            h = shard_activations(h)
+            mamba_p, g = gp
+
+            def inner(hh, p):
+                return hh + mamba2_block(p, hh, cfg.ssm_dims, chunk=cfg.ssd_chunk), None
+            h, _ = jax.lax.scan(inner, h, mamba_p)
+            sh = _dense_block(shared, h, cfg, pos)
+            return h + jax.nn.sigmoid(g.astype(jnp.float32)).astype(h.dtype)[None, None, :] * (sh - h)
+
+        fn = _maybe_remat(group_body, cfg)
+
+        def gstep(carry, gp):
+            return fn(carry, gp), None
+        x, _ = jax.lax.scan(gstep, x, (groups, gate))
+        if cfg.n_zamba_tail > 0:
+            tail = _sub(params, "tail.")
+            tail = {k: v[:cfg.n_zamba_tail] for k, v in tail.items()}
+
+            def tbody(h, p):
+                return h + mamba2_block(p, h, cfg.ssm_dims, chunk=cfg.ssd_chunk)
+            x = _scan_blocks(tail, x, cfg, None, tbody)
+
+    elif cfg.family == "moe":
+        x = _embed_tokens(params, cfg, tokens)
+        pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        stack = _sub(params, "blocks.")
+
+        def body(carry, p):
+            h, aux = carry
+            h = shard_activations(h)
+            h, a = _moe_block(p, h, cfg, pos)
+            return (h, aux + a)
+        fn = _maybe_remat(body, cfg)
+
+        def step(carry, p):
+            return fn(carry, p), None
+        (x, aux_total), _ = jax.lax.scan(step, (x, aux_total), stack)
+
+    else:  # dense / gemma2
+        x = _embed_tokens(params, cfg, tokens)
+        pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        stack = _sub(params, "blocks.")
+        if cfg.family == "gemma2":
+            # pair scan: even layers local (static sliding window), odd global
+            even = {k: v[0::2] for k, v in stack.items()}
+            odd = {k: v[1::2] for k, v in stack.items()}
+
+            def pair_body(h, pw):
+                h = shard_activations(h)
+                pe, po = pw
+                h = _dense_block(pe, h, cfg, pos, window=cfg.window)
+                return _dense_block(po, h, cfg, pos, window=0)
+            fn = _maybe_remat(pair_body, cfg)
+
+            def step(carry, pw):
+                return fn(carry, pw), None
+            x, _ = jax.lax.scan(step, x, (even, odd))
+        else:
+            def body(h, p):
+                return _dense_block(p, h, cfg, pos)
+            x = _scan_blocks(stack, x, cfg, pos, body)
+
+    x = rms_norm(x, params["final_norm"])
+    return x, aux_total
+
+
+def _constrain_chunk_stack(xc: jnp.ndarray) -> jnp.ndarray:
+    """(nc, B, C, d) loss-chunk stack: pin batch(axis 1)->data so the
+    backward's dxc never materialises batch-replicated (§Perf iter 2)."""
+    try:
+        am = jax.sharding.get_abstract_mesh()
+    except Exception:
+        return xc
+    if am is None or not getattr(am, "axis_names", ()):
+        return xc
+    axes = am.axis_names
+    da = tuple(a for a in ("pod", "data") if a in axes)
+    da_n = int(np.prod([am.shape[a] for a in da])) if da else 1
+    if not da or da_n <= 1 or xc.shape[1] % da_n:
+        return xc
+    return jax.lax.with_sharding_constraint(
+        xc, jax.sharding.PartitionSpec(None, da if len(da) > 1 else da[0]))
+
+
+def _chunked_xent(x: jnp.ndarray, embed: jnp.ndarray, targets: jnp.ndarray,
+                  cfg: ModelConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Cross-entropy streamed over sequence chunks.
+
+    Never materialises the full (B, S, V) logits — per chunk only
+    (B, C, V) exists transiently (and is remat'd in the backward pass).
+    With V up to 257k this is the difference between ~60 GiB and ~2 GiB of
+    temp per device (see EXPERIMENTS.md §Perf iteration 1).
+    """
+    B, S, d = x.shape
+    from .layers import fit_chunk
+    C = fit_chunk(S, cfg.loss_chunk)
+    nc = S // C
+    x = shard_activations(x)
+    xc = x.reshape(B, nc, C, d).transpose(1, 0, 2, 3)
+    xc = _constrain_chunk_stack(xc)          # (nc, B, C, d): batch on axis 1
+    tc = targets.reshape(B, nc, C).transpose(1, 0, 2)
+
+    def step(carry, xt):
+        nll_sum, cnt = carry
+        xi, ti = xt
+        xi = shard_activations(xi)
+        logits = jnp.einsum("bsd,vd->bsv", xi, embed.astype(xi.dtype))
+        logits = shard_logits(softcap(logits.astype(jnp.float32),
+                                      cfg.final_softcap))
+        mask = (ti != PAD_ID).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, ti[..., None].astype(jnp.int32),
+                                   axis=-1)[..., 0]
+        nll = (logz - gold) * mask
+        return (nll_sum + nll.sum(), cnt + mask.sum()), None
+
+    body = jax.checkpoint(step, policy=jax.checkpoint_policies.nothing_saveable)
+    (nll_sum, cnt), _ = jax.lax.scan(body, (jnp.zeros((), jnp.float32),
+                                            jnp.zeros((), jnp.float32)),
+                                     (xc, tc))
+    return nll_sum, cnt
+
+
+def forward_train(params: Dict[str, jnp.ndarray], cfg: ModelConfig,
+                  batch: Dict[str, jnp.ndarray]) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Returns (loss, metrics). batch: tokens/targets (+frontend embeds)."""
+    x, aux_total = forward_hidden(params, cfg, batch)
+    B = x.shape[0]
+    targets = batch["targets"]
+    if cfg.family == "vlm":
+        # frontend positions carry no next-token target
+        pad = jnp.zeros((B, cfg.n_frontend_tokens), targets.dtype)
+        targets = jnp.concatenate([pad, targets], axis=1)
+    nll_sum, cnt = _chunked_xent(x, params["embed"], targets, cfg)
+    loss = nll_sum / jnp.maximum(cnt, 1.0)
+    metrics = {"loss": loss, "aux_loss": aux_total, "tokens": cnt}
+    if cfg.family == "moe":
+        loss = loss + 0.01 * aux_total
+    return loss, metrics

@@ -1,0 +1,68 @@
+"""int8 error-feedback gradient compression.
+
+Two pieces:
+
+* :func:`compress_decompress` — value-level quantize→dequantize with an
+  error-feedback buffer (Seide et al. 1-bit SGD lineage): the quantisation
+  residual is carried into the next step, so compression noise is unbiased
+  over time.  This is what the train step applies; XLA still moves fp32 on
+  the wire (documented in DESIGN §7 — value-level simulation).
+* :func:`compressed_psum` — the *wire-level* building block: a shard_map
+  collective that all-gathers int8(+per-shard scale) across an axis and
+  de-quantises/sums locally — 4× fewer cross-pod bytes than a bf16
+  all-reduce for small axis sizes (the 2-pod case).  Unit-tested standalone;
+  wiring it under GSPMD's automatic reduce-scatter requires a custom
+  partitioner, which is future work.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _quant_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequant(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def init_error_feedback(params: Dict[str, jnp.ndarray]) -> Dict[str, jnp.ndarray]:
+    return {k: jnp.zeros(v.shape, jnp.float32) for k, v in params.items()}
+
+
+def compress_decompress(grads: Dict[str, jnp.ndarray], state: Dict[str, Any]
+                        ) -> Tuple[Dict[str, jnp.ndarray], Dict[str, Any]]:
+    ef = state.get("ef")
+    if ef is None:
+        ef = init_error_feedback(grads)
+    out, new_ef = {}, {}
+    for k, g in grads.items():
+        g32 = g.astype(jnp.float32) + ef[k]
+        q, s = _quant_int8(g32)
+        deq = _dequant(q, s)
+        out[k] = deq.astype(g.dtype)
+        new_ef[k] = g32 - deq
+    new_state = dict(state)
+    new_state["ef"] = new_ef
+    return out, new_state
+
+
+def compressed_psum(x: jnp.ndarray, axis_name: str) -> jnp.ndarray:
+    """int8 all-gather + local dequant-sum along a (small) mesh axis.
+
+    Call inside shard_map.  Sends 1 byte/elem/peer instead of ~4 for a ring
+    all-reduce — a win when the axis is small and slow (cross-pod DCN).
+    """
+    q, s = _quant_int8(x.astype(jnp.float32))
+    qg = jax.lax.all_gather(q, axis_name)           # (world, ...)
+    sg = jax.lax.all_gather(s, axis_name)           # (world,)
+    world = qg.shape[0]
+    deq = qg.astype(jnp.float32) * sg.reshape((world,) + (1,) * x.ndim)
+    return deq.sum(axis=0)

@@ -1,0 +1,124 @@
+"""Optimizers: AdamW and Adafactor (factored second moment).
+
+AdamW keeps fp32 m/v (optionally bf16 m to cut optimizer HBM).  Adafactor
+factorises the second moment of every >=2-D parameter into row/col statistics
+(Shazeer & Stern, arXiv:1804.04235) — the default for the giant archs
+(arctic-480b, mistral-large-123b) so optimizer state fits 16 GB/chip at 256
+chips (DESIGN.md §5 napkin math).
+
+All state is a pytree mirroring the params tree, so the FSDP shardings apply
+to optimizer state unchanged.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    kind: str = "adamw"                 # "adamw" | "adafactor"
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    m_dtype: str = "float32"            # "bfloat16" halves first-moment HBM
+    min_dim_factored: int = 2           # adafactor: factor dims >= 2
+
+
+def default_opt_for(model_name: str) -> OptConfig:
+    if any(t in model_name for t in ("arctic", "mistral-large")):
+        return OptConfig(kind="adafactor")
+    return OptConfig()
+
+
+def opt_state_entries(opt: OptConfig, shapes: Dict[str, Tuple[int, ...]]
+                      ) -> Dict[str, Tuple[Tuple[int, ...], str]]:
+    """name -> (shape, role) for optimizer slots; role keys sharding reuse."""
+    out: Dict[str, Tuple[Tuple[int, ...], str]] = {}
+    for k, shp in shapes.items():
+        if opt.kind == "adamw":
+            out[f"m.{k}"] = (shp, k)
+            out[f"v.{k}"] = (shp, k)
+        else:
+            out[f"m.{k}"] = (shp, k)
+            if len(shp) >= opt.min_dim_factored:
+                out[f"vr.{k}"] = (shp[:-1], k)          # row stats
+                out[f"vc.{k}"] = (shp[:-2] + shp[-1:], k)  # col stats
+            else:
+                out[f"v.{k}"] = (shp, k)
+    return out
+
+
+def init_opt_state(opt: OptConfig, params: Dict[str, jnp.ndarray]
+                   ) -> Dict[str, jnp.ndarray]:
+    m_dt = jnp.bfloat16 if opt.m_dtype == "bfloat16" else jnp.float32
+    out = {}
+    for k, (shp, _) in opt_state_entries(
+            opt, {k: tuple(v.shape) for k, v in params.items()}).items():
+        out[k] = jnp.zeros(shp, m_dt if k.startswith("m.") else jnp.float32)
+    return out
+
+
+def apply_update(opt: OptConfig, params: Dict[str, jnp.ndarray],
+                 grads: Dict[str, jnp.ndarray],
+                 state: Dict[str, jnp.ndarray], step: jnp.ndarray,
+                 lr: Optional[jnp.ndarray] = None
+                 ) -> Tuple[Dict[str, jnp.ndarray], Dict[str, jnp.ndarray]]:
+    """One optimizer step.  ``lr`` (traced scalar) overrides ``opt.lr`` —
+    Adam-family updates are invariant to gradient scaling, so schedules must
+    scale the *update*, never the gradients."""
+    eff_lr = opt.lr if lr is None else lr
+    new_params, new_state = {}, {}
+    t = step.astype(jnp.float32) + 1.0
+    for k, p in params.items():
+        g = grads[k].astype(jnp.float32)
+        m = state[f"m.{k}"].astype(jnp.float32)
+        m = opt.b1 * m + (1 - opt.b1) * g
+        if opt.kind == "adamw":
+            v = state[f"v.{k}"]
+            v = opt.b2 * v + (1 - opt.b2) * g * g
+            mhat = m / (1 - opt.b1 ** t)
+            vhat = v / (1 - opt.b2 ** t)
+            upd = mhat / (jnp.sqrt(vhat) + opt.eps)
+            new_state[f"v.{k}"] = v
+        else:
+            if f"vr.{k}" in state:
+                vr = state[f"vr.{k}"]
+                vc = state[f"vc.{k}"]
+                g2 = g * g + 1e-30
+                vr = opt.b2 * vr + (1 - opt.b2) * g2.mean(axis=-1)
+                vc = opt.b2 * vc + (1 - opt.b2) * g2.mean(axis=-2)
+                # factored reconstruction: vr ⊗ vc / mean(vr)
+                denom = jnp.maximum(vr.mean(axis=-1, keepdims=True), 1e-30)
+                vhat = (vr[..., :, None] * vc[..., None, :]) / denom[..., None]
+                upd = m / (jnp.sqrt(vhat / (1 - opt.b2 ** t)) + opt.eps)
+                new_state[f"vr.{k}"] = vr
+                new_state[f"vc.{k}"] = vc
+            else:
+                v = state[f"v.{k}"]
+                v = opt.b2 * v + (1 - opt.b2) * g * g
+                upd = m / (jnp.sqrt(v / (1 - opt.b2 ** t)) + opt.eps)
+                new_state[f"v.{k}"] = v
+        if p.ndim >= 2:
+            upd = upd + opt.weight_decay * p
+        new_params[k] = (p - eff_lr * upd).astype(p.dtype)
+        new_state[f"m.{k}"] = m.astype(state[f"m.{k}"].dtype)
+    return new_params, new_state
+
+
+def global_norm(tree: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(v.astype(jnp.float32)))
+                        for v in tree.values()))
+
+
+def clip_by_global_norm(grads: Dict[str, jnp.ndarray], max_norm: float
+                        ) -> Tuple[Dict[str, jnp.ndarray], jnp.ndarray]:
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return {k: (v * scale).astype(v.dtype) for k, v in grads.items()}, gn

@@ -1,0 +1,157 @@
+"""Training step: loss → grads → clip → optimizer, with μ-batch accumulation.
+
+* fp32 master params, bf16 compute (the model code casts at use sites).
+* μ-batched gradient accumulation via ``lax.scan``: XLA's latency-hiding
+  scheduler overlaps the reduce-scatter of one μ-batch's grads with the next
+  μ-batch's compute (compute/comm overlap, DESIGN §5).
+* optional value-level int8 error-feedback gradient compression
+  (train/grad_compress.py) before the update.
+* LR schedule: linear warmup → cosine.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.transformer import ModelConfig, forward_train
+from .optimizer import (OptConfig, apply_update, clip_by_global_norm,
+                        init_opt_state, opt_state_entries)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    opt: OptConfig = OptConfig()
+    max_grad_norm: float = 1.0
+    n_microbatches: int = 1
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    compress_grads: bool = False
+
+
+def lr_at(tc: TrainConfig, step: jnp.ndarray) -> jnp.ndarray:
+    s = step.astype(jnp.float32)
+    # warmup counts from 1 so the first step takes a real update
+    warm = jnp.minimum((s + 1.0) / jnp.maximum(tc.warmup_steps, 1), 1.0)
+    prog = jnp.clip((s - tc.warmup_steps) /
+                    jnp.maximum(tc.total_steps - tc.warmup_steps, 1), 0, 1)
+    return warm * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+
+
+def make_train_step(cfg: ModelConfig, tc: TrainConfig
+                    ) -> Callable[[Dict[str, Any], Dict[str, jnp.ndarray]],
+                                  Tuple[Dict[str, Any], Dict[str, jnp.ndarray]]]:
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    state = {"step": i32[], "params": {...}, "opt": {...}}
+    batch: tokens/targets (B, S) [+ frontend]; B is the per-call global batch.
+    """
+
+    def loss_fn(params, batch):
+        return forward_train(params, cfg, batch)
+
+    def grads_of(params, batch):
+        # bf16 backward: differentiate wrt bf16 parameter copies so every
+        # cross-device gradient reduction (and the activation-gradient
+        # traffic of the whole backward) moves bf16, not f32 — §Perf iter 2.
+        # The f32 master copy is updated with the (f32-cast) result.
+        p16 = {k: v.astype(cfg.compute_dtype) for k, v in params.items()}
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            p16, batch)
+        # grads stay bf16 until apply_update's internal f32 cast, so the
+        # per-layer reductions inside the scan transpose move bf16
+        return loss, metrics, grads
+
+    def train_step(state, batch):
+        params = state["params"]
+        if tc.n_microbatches > 1:
+            n = tc.n_microbatches
+
+            def micro(carry, mb):
+                acc, loss_acc = carry
+                loss, metrics, grads = grads_of(params, mb)
+                acc = {k: acc[k] + grads[k].astype(jnp.float32) for k in acc}
+                return (acc, loss_acc + loss), None
+
+            mbs = {k: v.reshape((n, v.shape[0] // n) + v.shape[1:])
+                   for k, v in batch.items()}
+            zero = {k: jnp.zeros(v.shape, jnp.float32)
+                    for k, v in params.items()}
+            (gacc, loss_sum), _ = jax.lax.scan(micro, (zero, 0.0), mbs)
+            grads = {k: v / n for k, v in gacc.items()}
+            loss = loss_sum / n
+            metrics = {"loss": loss}
+        else:
+            loss, metrics, grads = grads_of(params, batch)
+
+        if tc.compress_grads:
+            from .grad_compress import compress_decompress
+            grads, state = compress_decompress(grads, state)
+
+        grads, gnorm = clip_by_global_norm(grads, tc.max_grad_norm)
+        lr = lr_at(tc, state["step"]) * tc.opt.lr
+        new_params, new_opt = apply_update(tc.opt, params, grads, state["opt"],
+                                           state["step"], lr=lr)
+        new_state = dict(state)
+        new_state.update(step=state["step"] + 1, params=new_params,
+                         opt=new_opt)
+        metrics = dict(metrics)
+        metrics.update(grad_norm=gnorm, lr=lr)
+        return new_state, metrics
+
+    return train_step
+
+
+def init_train_state(cfg: ModelConfig, tc: TrainConfig, seed: int = 0
+                     ) -> Dict[str, Any]:
+    from ..models.transformer import init_params
+    params = init_params(cfg, seed)
+    state = {"step": jnp.zeros((), jnp.int32), "params": params,
+             "opt": init_opt_state(tc.opt, params)}
+    if tc.compress_grads:
+        from .grad_compress import init_error_feedback
+        state["ef"] = init_error_feedback(params)
+    return state
+
+
+def train_state_specs(cfg: ModelConfig, tc: TrainConfig) -> Dict[str, Any]:
+    """ShapeDtypeStructs for the dry-run (no allocation)."""
+    from ..models.transformer import param_specs
+    pspecs = param_specs(cfg)
+    m_dt = jnp.bfloat16 if tc.opt.m_dtype == "bfloat16" else jnp.float32
+    opt = {k: jax.ShapeDtypeStruct(shp, m_dt if k.startswith("m.") else jnp.float32)
+           for k, (shp, _) in opt_state_entries(
+               tc.opt, {k: tuple(s.shape) for k, s in pspecs.items()}).items()}
+    state = {"step": jax.ShapeDtypeStruct((), jnp.int32), "params": pspecs,
+             "opt": opt}
+    if tc.compress_grads:
+        state["ef"] = {k: jax.ShapeDtypeStruct(s.shape, jnp.float32)
+                       for k, s in pspecs.items()}
+    return state
+
+
+def train_state_logical_axes(cfg: ModelConfig, tc: TrainConfig):
+    """Logical axes pytree matching train_state_specs (for sharding)."""
+    from ..models.transformer import logical_axes, param_specs
+    lax_ = logical_axes(cfg)
+    pspecs = param_specs(cfg)
+    opt_ax = {}
+    for k, (shp, role) in opt_state_entries(
+            tc.opt, {k: tuple(s.shape) for k, s in pspecs.items()}).items():
+        base = lax_[role]
+        if len(shp) == len(base):
+            opt_ax[k] = base
+        else:
+            # factored adafactor slots: drop the reduced dim's logical name
+            if k.startswith("vr."):
+                opt_ax[k] = base[:-1]
+            else:  # vc: all but second-to-last
+                opt_ax[k] = base[:-2] + base[-1:]
+    state = {"step": (), "params": lax_, "opt": opt_ax}
+    if tc.compress_grads:
+        state["ef"] = lax_
+    return state

@@ -1,0 +1,204 @@
+"""Unit tests: relations, indexes, joins, splitting, predicates."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from conftest import brute_force_join, tiny_db
+
+from repro.core.index import Catalog, build_index, build_rowset_index
+from repro.core.joins import (JoinNode, JoinSpec, chain_join, full_join,
+                              full_join_matrix, join_size,
+                              materialize_residual)
+from repro.core.predicates import Pred, pushdown
+from repro.core.relation import Relation, combine_columns, fingerprint128
+from repro.core.splitting import build_template, split_join, split_plans
+
+
+# ---------------------------------------------------------------------------
+# relation / fingerprints
+# ---------------------------------------------------------------------------
+
+
+def test_relation_basics():
+    r = Relation("r", {"a": np.array([1, 2, 3]), "b": np.array([4, 5, 6])})
+    assert r.nrows == 3
+    assert r.attrs == ["a", "b"]
+    f = r.filter(np.array([True, False, True]))
+    assert f.nrows == 2
+    p = r.project(["b"])
+    assert p.attrs == ["b"]
+
+
+def test_combine_columns_exact_packing_reversible_order():
+    rng = np.random.default_rng(0)
+    a = rng.integers(0, 50, 200)
+    b = rng.integers(0, 37, 200)
+    k = combine_columns([a, b])
+    # distinct pairs -> distinct keys
+    pairs = set(zip(a.tolist(), b.tolist()))
+    assert len(set(k.tolist())) == len(pairs)
+
+
+@given(st.lists(st.integers(0, 1000), min_size=1, max_size=64))
+@settings(max_examples=30, deadline=None)
+def test_fingerprint_equal_rows_equal_fp(vals):
+    a = np.asarray(vals, dtype=np.int64)
+    f1 = fingerprint128([a, a + 1])
+    f2 = fingerprint128([a.copy(), a + 1])
+    assert np.array_equal(f1, f2)
+
+
+def test_fingerprint_sensitive_to_order_and_value():
+    a = np.array([1, 2, 3], dtype=np.int64)
+    b = np.array([3, 2, 1], dtype=np.int64)
+    assert not np.array_equal(fingerprint128([a, b]), fingerprint128([b, a]))
+    assert not np.array_equal(fingerprint128([a]), fingerprint128([a + 1]))
+
+
+# ---------------------------------------------------------------------------
+# sorted index
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(0, 2**31), st.integers(2, 40))
+@settings(max_examples=25, deadline=None)
+def test_sorted_index_ranges_match_numpy(seed, dom):
+    rng = np.random.default_rng(seed)
+    col = rng.integers(0, dom, 300)
+    rel = Relation("x", {"a": col})
+    idx = build_index(rel, ["a"])
+    q = rng.integers(-1, dom + 1, 64)
+    lo, hi = idx.ranges(q)
+    sv = np.sort(col)
+    assert np.array_equal(lo, np.searchsorted(sv, q, "left"))
+    assert np.array_equal(hi, np.searchsorted(sv, q, "right"))
+    # row ids at positions actually hold the queried key
+    for i, v in enumerate(q):
+        if hi[i] > lo[i]:
+            rows = idx.row_ids_at(np.arange(lo[i], hi[i]))
+            assert (col[rows] == v).all()
+
+
+def test_rowset_index_membership():
+    rng = np.random.default_rng(1)
+    rel = Relation("x", {"a": rng.integers(0, 10, 100),
+                         "b": rng.integers(0, 10, 100)})
+    rs = build_rowset_index(rel, ["a", "b"])
+    probe = {"a": np.concatenate([rel.columns["a"][:20], np.array([99])]),
+             "b": np.concatenate([rel.columns["b"][:20], np.array([99])])}
+    got = rs.contains_rows(probe)
+    assert got[:20].all()
+    assert not got[20]
+
+
+def test_catalog_stats():
+    cat = Catalog()
+    rel = Relation("x", {"a": np.array([1, 1, 1, 2, 3, 3])})
+    st_ = cat.stats(rel, ["a"])
+    assert st_.distinct == 3
+    assert st_.max_degree == 3
+    assert np.array_equal(st_.degree_of(np.array([1, 2, 3, 4])),
+                          np.array([3, 1, 2, 0]))
+
+
+# ---------------------------------------------------------------------------
+# joins: full join vs brute force
+# ---------------------------------------------------------------------------
+
+
+def test_full_join_matches_brute_force(cat, chain_rst):
+    res = full_join(cat, chain_rst)
+    expected = brute_force_join(chain_rst)
+    attrs = chain_rst.output_attrs
+    got = {tuple(int(res[a][i]) for a in attrs)
+           for i in range(len(next(iter(res.values()))))}
+    want = {tuple(int(r[a]) for a in attrs) for r in expected}
+    assert got == want
+    n = next(iter(res.values())).shape[0]
+    assert n == len(expected)
+    assert join_size(cat, chain_rst) == len(expected)
+
+
+def test_tree_join_and_validation(cat):
+    R, S, T = tiny_db()
+    # branching tree: S root with children R (on b) and T (on c)
+    spec = JoinSpec("tree", [
+        JoinNode("S", S, None, ()),
+        JoinNode("R", R, "S", ("b",)),
+        JoinNode("T", T, "S", ("c",)),
+    ])
+    assert not spec.is_chain
+    res = full_join_matrix(cat, spec)
+    want = brute_force_join(spec)
+    assert res.shape[0] == len(want)
+    with pytest.raises(ValueError):
+        JoinSpec("bad", [JoinNode("S", S, None, ()),
+                         JoinNode("R", R, "S", ("zzz",))])
+
+
+def test_cyclic_join_residual(cat):
+    rng = np.random.default_rng(2)
+    R = Relation("R", {"a": rng.integers(0, 6, 30), "b": rng.integers(0, 6, 30),
+                       "rid": np.arange(30)})
+    S = Relation("S", {"b": rng.integers(0, 6, 30), "c": rng.integers(0, 6, 30),
+                       "sid": np.arange(30)})
+    T = Relation("T", {"c": rng.integers(0, 6, 30), "a": rng.integers(0, 6, 30),
+                       "tid": np.arange(30)})
+    spec = JoinSpec("tri", [
+        JoinNode("R", R, None, ()),
+        JoinNode("S", S, "R", ("b",)),
+        JoinNode("T", T, None, ("c", "a"), kind="residual"),
+    ])
+    assert spec.is_cyclic
+    res = full_join_matrix(cat, spec)
+    want = brute_force_join(spec)
+    assert res.shape[0] == len(want)
+
+
+# ---------------------------------------------------------------------------
+# splitting / templates
+# ---------------------------------------------------------------------------
+
+
+def test_template_covers_schema(cat, chain_rst):
+    tpl = build_template([chain_rst])
+    assert sorted(tpl) == sorted(chain_rst.output_attrs)
+
+
+def test_split_plan_sources_valid(cat, chain_rst):
+    plans = split_plans([chain_rst])
+    plan = plans[0]
+    for pair in plan.pairs:
+        if pair.source_alias is not None:
+            rel = chain_rst.node(pair.source_alias).relation
+            assert set(pair.attrs) <= set(rel.attrs)
+        else:
+            assert pair.path_aliases
+
+
+def test_split_fake_edges_prefer_same_source():
+    rng = np.random.default_rng(3)
+    # one wide relation: all pairs co-located => all edges after first are fake
+    W = Relation("W", {c: rng.integers(0, 5, 20) for c in "abcd"})
+    spec = JoinSpec("w", [JoinNode("W", W, None, ())])
+    plan = split_join(spec, ["a", "b", "c", "d"])
+    assert all(p.fake_edge_to_prev for p in plan.pairs[1:])
+
+
+# ---------------------------------------------------------------------------
+# predicates
+# ---------------------------------------------------------------------------
+
+
+def test_pushdown_equals_posthoc_filter(cat, chain_rst):
+    preds = [Pred("d", "<=", 6), Pred("a", ">", 2)]
+    filtered = pushdown(chain_rst, preds)
+    res_f = full_join_matrix(cat, filtered, attrs=chain_rst.output_attrs)
+    res = full_join(cat, chain_rst)
+    keep = (res["d"] <= 6) & (res["a"] > 2)
+    attrs = chain_rst.output_attrs
+    want = np.stack([res[a][keep] for a in attrs], axis=1)
+    got = {tuple(r) for r in res_f.tolist()}
+    exp = {tuple(r) for r in want.tolist()}
+    assert got == exp

@@ -1,0 +1,158 @@
+"""Pallas kernel validation: shape/dtype sweeps vs pure-jnp/numpy oracles."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+from repro.kernels.searchsorted import PreparedKeys, searchsorted_pallas
+
+
+# ---------------------------------------------------------------------------
+# searchsorted
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(0, 2**31), st.integers(1, 3000), st.integers(1, 800),
+       st.sampled_from([8, 64, 2**20, 2**45]))
+@settings(max_examples=25, deadline=None)
+def test_searchsorted_sweep(seed, nk, nq, dom):
+    rng = np.random.default_rng(seed)
+    keys = np.sort(rng.integers(-dom, dom, nk).astype(np.int64))
+    qs = rng.integers(-2 * dom, 2 * dom, nq).astype(np.int64)
+    lo, hi = ops.searchsorted(keys, qs)
+    lo_r, hi_r = ref.searchsorted_ref(keys, qs)
+    assert np.array_equal(lo, lo_r)
+    assert np.array_equal(hi, hi_r)
+
+
+def test_searchsorted_equal_runs_across_blocks():
+    keys = np.sort(np.repeat(np.arange(5, dtype=np.int64), 200))
+    qs = np.arange(-1, 7, dtype=np.int64)
+    lo, hi = ops.searchsorted(keys, qs)
+    lo_r, hi_r = ref.searchsorted_ref(keys, qs)
+    assert np.array_equal(lo, lo_r) and np.array_equal(hi, hi_r)
+
+
+def test_searchsorted_prepared_reuse():
+    rng = np.random.default_rng(0)
+    keys = np.sort(rng.integers(0, 1000, 5000).astype(np.int64))
+    prep = PreparedKeys(keys)
+    for _ in range(3):
+        qs = rng.integers(0, 1000, 300).astype(np.int64)
+        lo, hi = searchsorted_pallas(prep, qs)
+        lo_r, hi_r = ref.searchsorted_ref(keys, qs)
+        assert np.array_equal(lo, lo_r) and np.array_equal(hi, hi_r)
+
+
+# ---------------------------------------------------------------------------
+# walk hop
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(0, 2**31), st.integers(1, 2000), st.integers(1, 600))
+@settings(max_examples=20, deadline=None)
+def test_walk_hop_sweep(seed, nk, nq):
+    rng = np.random.default_rng(seed)
+    keys = np.sort(rng.integers(0, max(nk // 4, 2), nk).astype(np.int64))
+    qs = rng.integers(-1, max(nk // 4, 2) + 1, nq).astype(np.int64)
+    u = rng.random(nq).astype(np.float32)
+    pos, deg = ops.walk_hop(keys, qs, u)
+    pos_r, deg_r = ref.walk_hop_ref(keys, qs, u)
+    assert np.array_equal(deg, deg_r)
+    alive = deg_r > 0
+    assert np.array_equal(pos[alive], pos_r[alive])
+
+
+# ---------------------------------------------------------------------------
+# segdegree
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(0, 2**31), st.integers(1, 4000), st.integers(1, 200))
+@settings(max_examples=20, deadline=None)
+def test_segdegree_sweep(seed, n, dom):
+    rng = np.random.default_rng(seed)
+    keys = np.sort(rng.integers(0, dom, n).astype(np.int64))
+    d, m = ops.segdegree(keys)
+    d_r, m_r = ref.segdegree_ref(keys)
+    assert (d, m) == (d_r, m_r)
+
+
+def test_segdegree_run_spanning_many_blocks():
+    keys = np.full(1000, 42, dtype=np.int64)
+    assert ops.segdegree(keys) == (1, 1000)
+
+
+# ---------------------------------------------------------------------------
+# weighted pick
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(0, 2**31))
+@settings(max_examples=15, deadline=None)
+def test_ranged_weighted_pick(seed):
+    rng = np.random.default_rng(seed)
+    n = 500
+    w = rng.random(n)
+    w[rng.random(n) < 0.3] = 0.0
+    cs = np.concatenate([[0.0], np.cumsum(w)])
+    lo = rng.integers(0, n - 50, 200)
+    hi = lo + rng.integers(1, 50, 200)
+    u = rng.random(200)
+    pos = ops.ranged_weighted_pick(cs, lo, hi, u)
+    assert ((pos >= lo) & (pos < hi)).all()
+    nonempty = (cs[hi] - cs[lo]) > 0
+    assert (w[pos[nonempty]] > 0).all()
+
+
+def test_ranged_weighted_pick_distribution():
+    w = np.array([1.0, 0.0, 3.0, 0.0, 6.0], dtype=np.float64)
+    cs = np.concatenate([[0.0], np.cumsum(w)])
+    rng = np.random.default_rng(0)
+    N = 30_000
+    lo = np.zeros(N, np.int64)
+    hi = np.full(N, 5, np.int64)
+    pos = ops.ranged_weighted_pick(cs, lo, hi, rng.random(N))
+    freq = np.bincount(pos, minlength=5) / N
+    np.testing.assert_allclose(freq, w / w.sum(), atol=0.02)
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("B,H,KVH,D,S,cap,win", [
+    (2, 8, 4, 128, 384, 0.0, 0),
+    (1, 16, 8, 128, 256, 50.0, 0),
+    (2, 4, 1, 128, 512, 0.0, 128),
+    (1, 8, 8, 64, 256, 30.0, 64),
+    (3, 4, 2, 64, 130, 0.0, 0),     # unaligned S -> padding path
+])
+def test_decode_attention_allclose(B, H, KVH, D, S, cap, win):
+    rng = np.random.default_rng(B * 1000 + S)
+    q = rng.standard_normal((B, H, D)).astype(np.float32)
+    k = rng.standard_normal((B, S, KVH, D)).astype(np.float32)
+    v = rng.standard_normal((B, S, KVH, D)).astype(np.float32)
+    lens = rng.integers(max(S // 2, 1), S + 1, B)
+    out = ops.decode_attention(q, k, v, lens, softcap=cap, window=win)
+    want = ref.decode_attention_ref(q, k, v, lens, softcap=cap, window=win)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_decode_attention_bf16():
+    rng = np.random.default_rng(5)
+    B, H, KVH, D, S = 2, 8, 4, 128, 256
+    q = rng.standard_normal((B, H, D)).astype(jnp.bfloat16)
+    k = rng.standard_normal((B, S, KVH, D)).astype(jnp.bfloat16)
+    v = rng.standard_normal((B, S, KVH, D)).astype(jnp.bfloat16)
+    lens = np.full(B, S)
+    out = np.asarray(ops.decode_attention(q, k, v, lens), dtype=np.float32)
+    want = np.asarray(ref.decode_attention_ref(
+        np.asarray(q, np.float32), np.asarray(k, np.float32),
+        np.asarray(v, np.float32), lens))
+    np.testing.assert_allclose(out, want, rtol=5e-2, atol=5e-2)

@@ -1,0 +1,165 @@
+"""Per-arch smoke tests + decode/prefill consistency + SSD math checks."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, get_smoke_config
+from repro.models.layers import decode_attention, flash_attention
+from repro.models.serve import decode_step, init_cache, prefill_step
+from repro.models.ssm import SSMDims, mamba2_block, mamba2_decode, ssm_param_shapes
+from repro.models.transformer import forward_train, init_params
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_arch_smoke_forward_shapes_no_nans(arch):
+    cfg = get_smoke_config(arch)
+    params = init_params(cfg, seed=0)
+    rng = np.random.default_rng(0)
+    B, S = 2, 64
+    batch = {"tokens": jnp.asarray(rng.integers(4, cfg.vocab, (B, S)), jnp.int32),
+             "targets": jnp.asarray(rng.integers(4, cfg.vocab, (B, S)), jnp.int32)}
+    if cfg.frontend != "none":
+        batch["frontend"] = jnp.asarray(
+            rng.standard_normal((B, cfg.n_frontend_tokens, cfg.d_model)),
+            cfg.compute_dtype)
+    loss, metrics = jax.jit(lambda p, b: forward_train(p, cfg, b))(params, batch)
+    assert np.isfinite(float(loss))
+    assert float(loss) > 0
+    assert metrics["tokens"] > 0
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_arch_one_train_step(arch):
+    from repro.train.optimizer import OptConfig
+    from repro.train.train_step import TrainConfig, init_train_state, make_train_step
+    cfg = get_smoke_config(arch)
+    tc = TrainConfig(opt=OptConfig(lr=1e-3), total_steps=10, warmup_steps=1)
+    state = init_train_state(cfg, tc, seed=0)
+    step = jax.jit(make_train_step(cfg, tc))
+    rng = np.random.default_rng(1)
+    B, S = 2, 64
+    batch = {"tokens": jnp.asarray(rng.integers(4, cfg.vocab, (B, S)), jnp.int32),
+             "targets": jnp.asarray(rng.integers(4, cfg.vocab, (B, S)), jnp.int32)}
+    if cfg.frontend != "none":
+        batch["frontend"] = jnp.asarray(
+            rng.standard_normal((B, cfg.n_frontend_tokens, cfg.d_model)),
+            cfg.compute_dtype)
+    state2, metrics = step(state, batch)
+    assert int(state2["step"]) == 1
+    assert np.isfinite(float(metrics["loss"]))
+    # params actually changed
+    delta = float(jnp.abs(state2["params"]["embed"] - state["params"]["embed"]).max())
+    assert delta > 0
+
+
+@pytest.mark.parametrize("arch", ["minitron-8b", "gemma2-9b", "mamba2-780m",
+                                  "zamba2-7b", "phi3.5-moe-42b-a6.6b"])
+def test_decode_matches_stepwise_forward(arch):
+    """Greedy-decode logits from the cache path == full forward logits.
+
+    Decodes tokens one at a time from an empty cache and compares the final
+    step's logits against prefill over the same prefix — validates RoPE
+    positions, cache updates, ring buffers, and SSM state recurrences.
+    """
+    cfg = get_smoke_config(arch)
+    params = init_params(cfg, seed=0)
+    rng = np.random.default_rng(2)
+    B, T = 2, 9
+    toks = rng.integers(4, cfg.vocab, (B, T)).astype(np.int32)
+
+    cache = init_cache(cfg, B, 32)
+    dstep = jax.jit(lambda c, t, l: decode_step(params, cfg, c, t, l))
+    logits = None
+    for t in range(T):
+        lengths = jnp.full((B,), t, jnp.int32)
+        cache, logits = dstep(cache, jnp.asarray(toks[:, t:t + 1]), lengths)
+
+    batch = {"tokens": jnp.asarray(toks)}
+    if cfg.frontend != "none":
+        batch["frontend"] = jnp.asarray(
+            rng.standard_normal((B, cfg.n_frontend_tokens, cfg.d_model)),
+            cfg.compute_dtype)
+        pytest.skip("frontend archs: decode consistency covered by dense cases")
+    full = jax.jit(lambda p, b: prefill_step(p, cfg, b))(params, batch)
+    got = np.asarray(logits, np.float32)
+    want = np.asarray(full, np.float32)
+    # bf16 compute: compare top-1 agreement + correlation
+    corr = np.corrcoef(got.ravel(), want.ravel())[0, 1]
+    assert corr > 0.99, f"decode/forward correlation {corr}"
+    assert (got.argmax(-1) == want.argmax(-1)).mean() >= 0.5
+
+
+def test_flash_attention_matches_naive():
+    rng = np.random.default_rng(3)
+    B, S, H, KV, D = 2, 128, 8, 4, 32
+    q = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, KV, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, KV, D)), jnp.float32)
+    out = flash_attention(q, k, v, causal=True, q_chunk=32, kv_chunk=64)
+    # naive reference
+    G = H // KV
+    qr = q.reshape(B, S, KV, G, D)
+    logits = jnp.einsum("bskgd,btkd->bkgst", qr, k) / np.sqrt(D)
+    mask = jnp.tril(jnp.ones((S, S), bool))
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    want = jnp.einsum("bkgst,btkd->bskgd", p, v).reshape(B, S, H, D)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_flash_attention_window_and_softcap():
+    rng = np.random.default_rng(4)
+    B, S, H, KV, D = 1, 128, 4, 4, 32
+    q = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, KV, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, KV, D)), jnp.float32)
+    out = flash_attention(q, k, v, causal=True, window=16, cap=20.0,
+                          q_chunk=32, kv_chunk=32)
+    logits = jnp.einsum("bshd,bthd->bhst", q, k) / np.sqrt(D)
+    logits = 20.0 * jnp.tanh(logits / 20.0)
+    i, j = jnp.arange(S)[:, None], jnp.arange(S)[None, :]
+    mask = (i >= j) & (j > i - 16)
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    want = jnp.einsum("bhst,bthd->bshd", p, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_chunked_equals_recurrence():
+    """Chunked SSD scan == token-by-token recurrence (the SSD duality)."""
+    rng = np.random.default_rng(5)
+    dims = SSMDims(d_model=32, d_inner=64, n_heads=4, head_dim=16, state=8)
+    B, S = 2, 64
+    from repro.models.ssm import ssd_chunked
+    u = rng.standard_normal((B, S, 4, 16)).astype(np.float32)
+    log_a = -np.abs(rng.standard_normal((B, S, 4))).astype(np.float32) * 0.1
+    Bc = rng.standard_normal((B, S, 8)).astype(np.float32)
+    Cc = rng.standard_normal((B, S, 8)).astype(np.float32)
+    y, h = ssd_chunked(jnp.asarray(u), jnp.asarray(log_a), jnp.asarray(Bc),
+                       jnp.asarray(Cc), chunk=16)
+    # recurrence
+    hs = np.zeros((B, 4, 8, 16), np.float32)
+    ys = np.zeros((B, S, 4, 16), np.float32)
+    for t in range(S):
+        a = np.exp(log_a[:, t])                      # (B,H)
+        hs = hs * a[:, :, None, None] + np.einsum("bn,bhp->bhnp", Bc[:, t], u[:, t])
+        ys[:, t] = np.einsum("bn,bhnp->bhp", Cc[:, t], hs)
+    np.testing.assert_allclose(np.asarray(y), ys, rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(h), hs, rtol=2e-3, atol=2e-3)
+
+
+def test_moe_capacity_and_aux():
+    from repro.models.moe import MoEDims, moe_ffn, moe_param_shapes
+    rng = np.random.default_rng(6)
+    dims = MoEDims(d_model=32, n_experts=4, top_k=2, d_ff=64)
+    params = {k: jnp.asarray(rng.standard_normal(s) * 0.05, jnp.float32)
+              for k, s in moe_param_shapes(dims).items()}
+    x = jnp.asarray(rng.standard_normal((2, 16, 32)), jnp.float32)
+    out, aux = moe_ffn(params, x, dims)
+    assert out.shape == x.shape
+    assert np.isfinite(np.asarray(out)).all()
+    assert float(aux) > 0

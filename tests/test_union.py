@@ -1,0 +1,218 @@
+"""Theorem 3 / Eq 1 / cover / Algorithm 1 / Algorithm 2 properties."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from scipy import stats as sps
+
+from repro.core.cover import build_cover
+from repro.core.framework import estimate_union, warmup
+from repro.core.index import Catalog
+from repro.core.joins import chain_join
+from repro.core.koverlap import KOverlaps, OverlapOracle, k_overlaps
+from repro.core.online import OnlineUnionSampler
+from repro.core.overlap import exact_union_size
+from repro.core.union_sampler import (BernoulliUnionSampler,
+                                      DisjointUnionSampler, SetUnionSampler)
+from repro.data.workloads import uq3
+
+
+# ---------------------------------------------------------------------------
+# Theorem 3 on random set systems (no joins needed — pure set identity)
+# ---------------------------------------------------------------------------
+
+
+class _SetOracle:
+    """Oracle over explicit sets (ground truth for the lattice algebra)."""
+
+    def __init__(self, sets):
+        self.sets = sets
+        names = list(sets)
+        import dataclasses
+
+        @dataclasses.dataclass
+        class FakeJoin:
+            name: str
+        self.joins = [FakeJoin(n) for n in names]
+        self.by_name = {n: j for n, j in zip(names, self.joins)}
+        self._cache = {}
+
+    def overlap(self, names):
+        cur = None
+        for n in set(names):
+            cur = self.sets[n] if cur is None else (cur & self.sets[n])
+        return float(len(cur))
+
+    def size(self, name):
+        return float(len(self.sets[name]))
+
+
+@given(st.integers(0, 10_000), st.integers(2, 5))
+@settings(max_examples=40, deadline=None)
+def test_theorem3_and_eq1_identity(seed, n_sets):
+    rng = np.random.default_rng(seed)
+    universe = list(range(60))
+    sets = {f"J{i}": set(rng.choice(universe, size=rng.integers(5, 40),
+                                    replace=False).tolist())
+            for i in range(n_sets)}
+    oracle = _SetOracle(sets)
+    ko = k_overlaps(oracle)
+    # A_j^k ground truth: elements of J_j in exactly k-1 other sets
+    union = set().union(*sets.values())
+    for name, s in sets.items():
+        for k in range(1, n_sets + 1):
+            truth = sum(1 for e in s
+                        if sum(e in t for t in sets.values()) == k)
+            assert ko.a[name][k - 1] == pytest.approx(truth), (name, k)
+    assert ko.union_size() == pytest.approx(len(union))
+
+
+@given(st.integers(0, 10_000), st.integers(2, 5))
+@settings(max_examples=40, deadline=None)
+def test_cover_partition_identity(seed, n_sets):
+    rng = np.random.default_rng(seed)
+    universe = list(range(50))
+    sets = {f"J{i}": set(rng.choice(universe, size=rng.integers(5, 35),
+                                    replace=False).tolist())
+            for i in range(n_sets)}
+    oracle = _SetOracle(sets)
+    cover = build_cover(oracle)
+    # ground truth cover: J'_i = J_i \ union of earlier
+    seen = set()
+    for name in cover.order:
+        piece = sets[name] - seen
+        assert cover.piece_sizes[name] == pytest.approx(len(piece)), name
+        seen |= sets[name]
+    assert cover.union_size == pytest.approx(len(seen))
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1 (uniformity; probe mode exact, record mode converging)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def wl3():
+    return uq3(scale=0.01, overlap=0.3, seed=0)
+
+
+def _chi2_uniform(sample_matrix, n_universe):
+    uni, counts = np.unique(
+        sample_matrix.view([("", sample_matrix.dtype)] * sample_matrix.shape[1]).ravel(),
+        return_counts=True)
+    N = sample_matrix.shape[0]
+    exp = N / n_universe
+    chi2 = float(((counts - exp) ** 2 / exp).sum()) + (n_universe - uni.shape[0]) * exp
+    return 1 - sps.chi2.cdf(chi2, df=n_universe - 1)
+
+
+def test_setunion_probe_uniform(wl3):
+    cat, joins = wl3.cat, wl3.joins
+    wr = warmup(cat, joins, method="exact")
+    est = estimate_union(wr.oracle)
+    U = exact_union_size(cat, joins)
+    assert est.union_size_cover == pytest.approx(U)
+    assert est.union_size_eq1 == pytest.approx(U)
+    s = SetUnionSampler(cat, joins, est.cover, membership="probe", seed=7)
+    ss = s.sample(120 * U)
+    p = _chi2_uniform(ss.matrix(), U)
+    assert p > 1e-3, f"Algorithm 1 (probe) not uniform: p={p}"
+
+
+def test_setunion_record_mode_converges(wl3):
+    cat, joins = wl3.cat, wl3.joins
+    wr = warmup(cat, joins, method="exact")
+    est = estimate_union(wr.oracle)
+    U = exact_union_size(cat, joins)
+    s = SetUnionSampler(cat, joins, est.cover, membership="record", seed=8)
+    ss = s.sample(60 * U)
+    # record mode discovers the cover lazily; allow a looser bar
+    p = _chi2_uniform(ss.matrix(), U)
+    assert p > 1e-5, f"record mode wildly non-uniform: p={p}"
+    assert ss.stats.revisions >= 0
+
+
+def test_bernoulli_union_uniform(wl3):
+    cat, joins = wl3.cat, wl3.joins
+    wr = warmup(cat, joins, method="exact")
+    sizes = {j.name: wr.oracle.size(j.name) for j in joins}
+    U = exact_union_size(cat, joins)
+    s = BernoulliUnionSampler(cat, joins, sizes, float(U), seed=9)
+    ss = s.sample(80 * U)
+    p = _chi2_uniform(ss.matrix(), U)
+    assert p > 1e-3, f"Bernoulli union sampler not uniform: p={p}"
+    assert ss.stats.canonical_rejects > 0
+
+
+def test_disjoint_union_proportional(wl3):
+    cat, joins = wl3.cat, wl3.joins
+    wr = warmup(cat, joins, method="exact")
+    sizes = {j.name: wr.oracle.size(j.name) for j in joins}
+    s = DisjointUnionSampler(cat, joins, sizes, seed=10)
+    ss = s.sample(6000)
+    tot = sum(sizes.values())
+    for j_idx, j in enumerate(joins):
+        frac = (ss.home == j_idx).mean()
+        assert frac == pytest.approx(sizes[j.name] / tot, abs=0.03)
+
+
+def test_sampling_cost_within_theorem2_bound(wl3):
+    """§3.3: expected candidate draws ≲ O(N + N log N) (generous constant)."""
+    cat, joins = wl3.cat, wl3.joins
+    wr = warmup(cat, joins, method="exact")
+    est = estimate_union(wr.oracle)
+    s = SetUnionSampler(cat, joins, est.cover, membership="probe", seed=11)
+    N = 2000
+    ss = s.sample(N)
+    bound = 40 * (N + N * np.log(max(N, 2)))
+    assert ss.stats.candidate_draws < bound
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 2 (online union)
+# ---------------------------------------------------------------------------
+
+
+def test_online_union_end_to_end(wl3):
+    cat, joins = wl3.cat, wl3.joins
+    ou = OnlineUnionSampler(cat, joins, seed=12, phi=512, rw_batch=128)
+    U = exact_union_size(cat, joins)
+    ss = ou.sample(40 * U)
+    assert len(ss) == 40 * U
+    assert ss.stats.reuse_accepts > 0
+    # marginal approx-uniformity (estimates refine online; generous bar)
+    mat = ss.matrix()
+    uni, counts = np.unique(mat.view([("", mat.dtype)] * mat.shape[1]).ravel(),
+                            return_counts=True)
+    assert uni.shape[0] >= 0.9 * U
+    assert counts.max() <= 12 * counts.mean()
+
+
+def test_online_reuse_rate_sane(wl3):
+    """Guard for the l-factor bug: copies per reuse draw must be ~1."""
+    cat, joins = wl3.cat, wl3.joins
+    ou = OnlineUnionSampler(cat, joins, seed=13, phi=10_000, rw_batch=256)
+    ss = ou.sample(500)
+    if ss.stats.reuse_accepts:
+        assert ss.stats.reuse_accepts <= 3 * ss.stats.iterations
+
+
+def test_rejection_mode_predicate(wl3):
+    """§8.3 mode 2: sampler-side predicate == sampling the filtered union."""
+    from repro.core.predicates import Pred, RejectingPredicate, pushdown
+    from repro.core.joins import JoinSpec
+    cat, joins = wl3.cat, wl3.joins
+    preds = [Pred("odate", "<=", 1500)]
+    # ground truth: union of pushed-down joins
+    filtered = [JoinSpec(j.name + "#f", pushdown(j, preds).nodes) for j in joins]
+    U_f = exact_union_size(cat, filtered)
+    if U_f < 10:
+        pytest.skip("filtered union too small for a distribution check")
+    wr = warmup(cat, joins, method="exact")
+    est = estimate_union(wr.oracle)
+    s = SetUnionSampler(cat, joins, est.cover, seed=21,
+                        predicate=RejectingPredicate(preds))
+    ss = s.sample(60 * U_f)
+    assert (ss.rows["odate"] <= 1500).all()
+    p = _chi2_uniform(ss.matrix(), U_f)
+    assert p > 1e-3, f"rejection-mode predicate sampling not uniform: p={p}"
