@@ -1,7 +1,15 @@
-"""Beyond-paper: host (numpy) vs device (jitted) chain-sampler throughput.
+"""Beyond-paper: host (numpy) vs device (jitted) sampler throughput.
 
-The jitted sampler runs the whole hop pipeline as one XLA program (no host
-round trips) — the deployment path that co-locates sampling with training.
+Two comparisons:
+
+* single chain join — the original device-path benchmark
+  (:class:`JaxChainSampler`, now backed by the generalised tree engine),
+* 2-join union — host ``SetUnionSampler`` vs the fused device engine
+  (``backend="jax"``): one jitted program per Algorithm-1 round, no host
+  round trips for cover selection / candidate draws / membership probes.
+
+The jitted samplers run the whole pipeline as one XLA program — the
+deployment path that co-locates sampling with training/serving.
 """
 
 from __future__ import annotations
@@ -10,14 +18,16 @@ import time
 
 import numpy as np
 
+from repro.core.framework import estimate_union, warmup
 from repro.core.jax_sampler import JaxChainSampler
 from repro.core.join_sampler import JoinSampler
+from repro.core.union_sampler import SetUnionSampler
 from repro.data.workloads import uq1
 
 from .common import emit
 
 
-def main(small: bool = True) -> None:
+def bench_chain(small: bool) -> None:
     wl = uq1(scale=0.1 if small else 0.5, overlap=0.4, seed=0, n_joins=1)
     cat, spec = wl.cat, wl.joins[0]
     n = 20_000 if small else 200_000
@@ -30,7 +40,7 @@ def main(small: bool = True) -> None:
     t_host = time.perf_counter() - t0
 
     dev = JaxChainSampler(cat, spec, seed=0)
-    dev.sample_batch(1024)                   # compile
+    dev.sample_batch(8192)                   # compile
     t0 = time.perf_counter()
     dev.sample_uniform(n, batch=8192)
     t_dev = time.perf_counter() - t0
@@ -38,6 +48,38 @@ def main(small: bool = True) -> None:
     emit("device_sampler_host_numpy", t_host / n * 1e6, f"n={n}")
     emit("device_sampler_jitted", t_dev / n * 1e6,
          f"speedup={t_host/max(t_dev,1e-9):.2f}x")
+
+
+def bench_union(small: bool) -> None:
+    """2-join union: host Algorithm-1 loop vs the fused device engine."""
+    wl = uq1(scale=0.1 if small else 0.5, overlap=0.4, seed=0, n_joins=2)
+    wr = warmup(wl.cat, wl.joins, method="exact")
+    est = estimate_union(wr.oracle)
+    n = 50_000 if small else 400_000
+
+    host = SetUnionSampler(wl.cat, wl.joins, est.cover, seed=3)
+    host.sample(1024)                        # warm caches
+    t0 = time.perf_counter()
+    host.sample(n)
+    t_host = time.perf_counter() - t0
+
+    dev = SetUnionSampler(wl.cat, wl.joins, est.cover, seed=3,
+                          backend="jax", round_batch=16384)
+    dev.sample(1024)                         # compile the fused round
+    t0 = time.perf_counter()
+    dev.sample(n)
+    t_dev = time.perf_counter() - t0
+
+    emit("union_engine_host_numpy", t_host / n * 1e6,
+         f"n={n} rate={n/max(t_host,1e-9):,.0f}/s")
+    emit("union_engine_jitted", t_dev / n * 1e6,
+         f"rate={n/max(t_dev,1e-9):,.0f}/s "
+         f"speedup={t_host/max(t_dev,1e-9):.2f}x")
+
+
+def main(small: bool = True) -> None:
+    bench_chain(small)
+    bench_union(small)
 
 
 if __name__ == "__main__":

@@ -13,7 +13,7 @@ import traceback
 
 from . import (bias_ablation, breakdown, data_scale, device_sampler,
                estimation_error, estimation_runtime, kernels_bench, reuse,
-               roofline, sampling_scaling)
+               roofline, sampling_scaling, union_engine)
 from .common import emit, header
 
 MODULES = [
@@ -25,6 +25,7 @@ MODULES = [
     ("reuse", reuse),                           # Fig 6a/6b
     ("bias_ablation", bias_ablation),           # DESIGN §7.9 ablation
     ("device_sampler", device_sampler),         # host vs jitted sampler
+    ("union_engine", union_engine),             # fused union rounds (backends)
     ("kernels_bench", kernels_bench),           # kernel micro-bench
     ("roofline", roofline),                     # §Roofline table
 ]

@@ -1,0 +1,64 @@
+"""Union-engine benchmark: fused device rounds across workload shapes.
+
+Sweeps the backend-abstracted ``SetUnionSampler`` over union workloads
+(chain-only UQ1, tree-shaped UQ3) and round-batch sizes, reporting
+samples/sec for the host engine vs the fused jitted engine plus the
+device engine's accounting (candidate draws per emitted sample).  The
+device path runs one jitted program per Algorithm-1 round — multinomial
+cover selection, candidate generation for all joins, membership masks,
+compaction — so its per-sample cost is flat in ``n``.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core.framework import estimate_union, warmup
+from repro.core.union_sampler import SetUnionSampler
+from repro.data.workloads import uq1, uq3
+
+from .common import emit
+
+
+def _bench_one(tag: str, wl, n: int, round_batch: int) -> None:
+    wr = warmup(wl.cat, wl.joins, method="exact")
+    est = estimate_union(wr.oracle)
+
+    host = SetUnionSampler(wl.cat, wl.joins, est.cover, seed=5)
+    host.sample(512)
+    t0 = time.perf_counter()
+    host.sample(n)
+    t_host = time.perf_counter() - t0
+
+    dev = SetUnionSampler(wl.cat, wl.joins, est.cover, seed=5,
+                          backend="jax", round_batch=round_batch)
+    dev.sample(512)                          # compile
+    stats0 = dev.stats.candidate_draws
+    t0 = time.perf_counter()
+    dev.sample(n)
+    t_dev = time.perf_counter() - t0
+    psi = (dev.stats.candidate_draws - stats0) / n
+
+    emit(f"union_engine_{tag}_host", t_host / n * 1e6,
+         f"rate={n/max(t_host,1e-9):,.0f}/s")
+    emit(f"union_engine_{tag}_jax_rb{round_batch}", t_dev / n * 1e6,
+         f"rate={n/max(t_dev,1e-9):,.0f}/s "
+         f"speedup={t_host/max(t_dev,1e-9):.2f}x psi={psi:.2f}")
+
+
+def main(small: bool = True) -> None:
+    scale = 0.1 if small else 0.5
+    n = 50_000 if small else 400_000
+    wl2 = uq1(scale=scale, overlap=0.4, seed=0, n_joins=2)
+    _bench_one("uq1x2", wl2, n, 16384)
+    wl5 = uq1(scale=scale, overlap=0.4, seed=0, n_joins=5)
+    _bench_one("uq1x5", wl5, n, 16384)
+    wlt = uq3(scale=scale, overlap=0.3, seed=0)
+    _bench_one("uq3tree", wlt, n, 16384)
+    # round-batch sensitivity on the 2-join union
+    for rb in (4096, 32768) if small else (8192, 65536):
+        _bench_one(f"uq1x2_rb{rb}", wl2, n, rb)
+
+
+if __name__ == "__main__":
+    main(small=False)

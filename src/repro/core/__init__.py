@@ -1,5 +1,7 @@
 """Core: the paper's contribution — sampling over the union of joins."""
 
+from .backends import (Backend, CandidateSource, MembershipOracle,
+                       NumpyBackend, get_backend)
 from .cover import Cover, build_cover, largest_first_order
 from .distributed import DistributedUnionSampler, merge_statistics, merge_streams
 from .framework import (UnionEstimates, WarmupResult, estimate_union,
@@ -22,7 +24,9 @@ from .union_sampler import (BernoulliUnionSampler, DisjointUnionSampler,
                             SampleSet, SetUnionSampler)
 
 __all__ = [
-    "BernoulliUnionSampler", "Catalog", "Cover", "DisjointUnionSampler",
+    "Backend", "BernoulliUnionSampler", "CandidateSource", "Catalog",
+    "Cover", "DisjointUnionSampler", "MembershipOracle", "NumpyBackend",
+    "get_backend",
     "DistributedUnionSampler", "HistogramOverlap", "JaxChainSampler", "JoinNode", "JoinSampler",
     "JoinSpec", "KOverlaps", "MembershipProber", "OnlineUnionSampler",
     "OverlapOracle", "Pred", "RandomWalkOverlap", "RejectingPredicate",

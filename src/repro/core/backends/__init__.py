@@ -1,0 +1,36 @@
+"""Execution backends for the union sampling engine.
+
+``get_backend("numpy" | "jax" | <Backend instance>, ...)`` is the single
+entry point the samplers use; see :mod:`repro.core.backends.base` for the
+:class:`CandidateSource` / :class:`MembershipOracle` contracts and DESIGN.md
+for the architecture overview.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence, Union
+
+from ..index import Catalog
+from ..joins import JoinSpec
+from .base import Backend, CandidateSource, MembershipOracle, Rows
+from .numpy_backend import NumpyBackend, NumpyCandidateSource
+
+__all__ = [
+    "Backend", "CandidateSource", "MembershipOracle", "Rows",
+    "NumpyBackend", "NumpyCandidateSource", "get_backend",
+]
+
+
+def get_backend(spec: Union[str, Backend], cat: Catalog,
+                joins: Sequence[JoinSpec], join_method: str = "ew",
+                seed: int = 0, **kwargs) -> Backend:
+    """Resolve a backend selector (``"numpy"``, ``"jax"``, or an instance)."""
+    if isinstance(spec, Backend):
+        return spec
+    if spec == "numpy":
+        return NumpyBackend(cat, joins, join_method=join_method, seed=seed)
+    if spec == "jax":
+        from .jax_backend import JaxBackend  # keep base import light
+        return JaxBackend(cat, joins, join_method=join_method, seed=seed,
+                          **kwargs)
+    raise ValueError(f"unknown backend {spec!r} (expected 'numpy' or 'jax')")

@@ -1,0 +1,84 @@
+"""Backend contracts for the union sampling engine.
+
+Algorithm 1 consumes exactly two primitives, and every execution substrate
+(host numpy, device JAX, future sharded meshes) supplies the same pair:
+
+* :class:`CandidateSource` — batched uniform candidate draws from one join
+  (§3.2's sampling subroutine).
+* :class:`MembershipOracle` — batched "is tuple ``t`` in join ``J``?" probes
+  (the cover-acceptance test of §3.1).
+
+A :class:`Backend` bundles one source per join plus one oracle over all of
+them.  The union samplers in :mod:`repro.core.union_sampler` and
+:mod:`repro.core.online` are written against these protocols only; selecting
+``backend="jax"`` swaps the host engine for the device-resident one without
+touching the algorithm layer.  Backends that can fuse a whole Algorithm-1
+round on device additionally expose a ``union_engine`` (see
+:class:`repro.core.backends.jax_backend.JaxUnionSampler`); callers feature-test
+with :func:`Backend.supports_fused_rounds`.
+
+See DESIGN.md ("Backend architecture") for the full contract and the guide to
+adding a new backend.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Protocol, Sequence, Tuple, runtime_checkable
+
+import numpy as np
+
+Rows = Dict[str, np.ndarray]
+
+
+@runtime_checkable
+class CandidateSource(Protocol):
+    """Uniform candidate draws from a single join.
+
+    ``draw`` returns ``(rows, draws)``: ``count`` uniform-with-replacement
+    samples of the join's output tuples plus the number of candidate walks
+    spent obtaining them (ψ of §3.3).  Implementations raise
+    :class:`repro.core.join_sampler.EmptyJoinError` when the join is
+    structurally empty.  ``rng`` is the host generator; device-resident
+    sources that carry their own PRNG state may ignore it (documented
+    per-implementation).
+    """
+
+    join_name: str
+
+    def draw(self, rng: np.random.Generator, count: int,
+             batch: Optional[int] = None) -> Tuple[Rows, int]:
+        ...
+
+    def is_empty(self) -> bool:
+        ...
+
+
+@runtime_checkable
+class MembershipOracle(Protocol):
+    """Batched membership probes against the joins of one union."""
+
+    def contains(self, join_name: str, rows: Rows) -> np.ndarray:
+        """Boolean vector: does ``join_name`` contain each tuple of ``rows``?"""
+        ...
+
+    def membership_matrix(self, rows: Rows,
+                          join_names: Optional[Sequence[str]] = None
+                          ) -> np.ndarray:
+        """(n_tuples, n_joins) boolean membership matrix."""
+        ...
+
+
+class Backend:
+    """One candidate source per join + one membership oracle over the union."""
+
+    name: str = "abstract"
+
+    def source(self, join_name: str) -> CandidateSource:
+        raise NotImplementedError
+
+    def oracle(self) -> MembershipOracle:
+        raise NotImplementedError
+
+    def supports_fused_rounds(self) -> bool:
+        """True when the backend can run a whole Algorithm-1 round on device."""
+        return False

@@ -1,0 +1,710 @@
+"""Device (JAX) backend — the union sampling engine resident on accelerator.
+
+Three layers, bottom-up:
+
+* :class:`DeviceTreeJoin` — generalises the jitted chain sampler to arbitrary
+  acyclic (tree) joins.  Each non-root node keeps its child rows sorted by a
+  **composite mixed-radix key** over the node's edge attributes (radices are
+  per-attribute domain widths shared across the whole join, so parent-side
+  query keys pack identically and probes stay exact), plus prefix-summed EW
+  weights; one draw is root inverse-CDF + per-node ``searchsorted`` →
+  ranged weighted pick → payload gathers, all ``jax.lax`` over fixed shapes.
+  On TPU the per-node range probe routes through the two-phase Pallas
+  pipeline of :mod:`repro.kernels.searchsorted` (``use_pallas``); on CPU it
+  lowers via ``jnp.searchsorted``.
+* :class:`DeviceJoinMembership` — batched "is tuple in join J" probes as
+  sorted-row-fingerprint lookups resident on device: per base relation, rows
+  are indexed by a 32-bit primary fingerprint (sorted) with a 32-bit
+  secondary for verification (64 bits total; the host oracle uses 128 — see
+  DESIGN.md for the collision budget).  A probe is one ``searchsorted`` per
+  relation plus a ``kmax``-wide duplicate window check, AND-reduced.
+* :class:`JaxUnionSampler` — fuses one whole Algorithm-1 round into a single
+  jitted program: multinomial cover selection (per-slot categorical),
+  candidate generation for *all* joins, cover-membership acceptance masks
+  with **retry-within-the-selected-join** (the distribution-correct loop —
+  see union_sampler's module docstring on the printed-pseudocode pitfall),
+  and compaction of accepted slots.  The host only tops up between rounds.
+
+:class:`JaxBackend` packages the per-join pieces behind the
+:class:`~repro.core.backends.base.Backend` protocols so
+``SetUnionSampler(backend="jax")`` / ``OnlineUnionSampler(backend="jax")``
+select the device engine without touching the algorithm layer.
+
+Limits (all checked at build time with clear errors): acyclic joins,
+``method="ew"`` weights, non-negative dict-encoded values whose packed edge
+domains fit in int32 (the device substrate is 32-bit; see DESIGN.md).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..index import Catalog
+from ..join_sampler import EmptyJoinError, JoinSampler
+from ..joins import JoinSpec
+from ..membership import rows_length
+from .base import Backend, Rows
+
+_I32_LIM = 1 << 31
+
+
+# ---------------------------------------------------------------------------
+# 32-bit row fingerprints — identical arithmetic on host (build) and device
+# (probe): murmur3-style finalizer, FNV-style column combine, uint32 wraps.
+# ---------------------------------------------------------------------------
+
+
+def _mix32_consts(salt: int) -> Tuple[int, int, int]:
+    return ((0x9E3779B9 * (salt + 1)) & 0xFFFFFFFF, 0x85EBCA6B, 0xC2B2AE35)
+
+
+def mix32_np(x: np.ndarray, salt: int = 0) -> np.ndarray:
+    add, m1, m2 = _mix32_consts(salt)
+    z = (np.asarray(x, np.int64) & 0xFFFFFFFF).astype(np.uint32)
+    with np.errstate(over="ignore"):
+        z = z + np.uint32(add)
+        z = (z ^ (z >> np.uint32(16))) * np.uint32(m1)
+        z = (z ^ (z >> np.uint32(13))) * np.uint32(m2)
+        z = z ^ (z >> np.uint32(16))
+    return z
+
+
+def mix32_jnp(x: jnp.ndarray, salt: int = 0) -> jnp.ndarray:
+    add, m1, m2 = _mix32_consts(salt)
+    z = x.astype(jnp.uint32)
+    z = z + jnp.uint32(add)
+    z = (z ^ (z >> jnp.uint32(16))) * jnp.uint32(m1)
+    z = (z ^ (z >> jnp.uint32(13))) * jnp.uint32(m2)
+    z = z ^ (z >> jnp.uint32(16))
+    return z
+
+
+_FNV32 = 16777619
+
+
+def fp32_np(cols: Sequence[np.ndarray], salt: int) -> np.ndarray:
+    acc = np.zeros(np.asarray(cols[0]).shape[0], dtype=np.uint32)
+    with np.errstate(over="ignore"):
+        for i, c in enumerate(cols):
+            acc = acc * np.uint32(_FNV32) ^ mix32_np(c, salt=salt * 1000 + i)
+    return acc
+
+
+def fp32_jnp(cols: Sequence[jnp.ndarray], salt: int) -> jnp.ndarray:
+    acc = jnp.zeros(cols[0].shape[0], dtype=jnp.uint32)
+    for i, c in enumerate(cols):
+        acc = acc * jnp.uint32(_FNV32) ^ mix32_jnp(c, salt=salt * 1000 + i)
+    return acc
+
+
+# ---------------------------------------------------------------------------
+# Composite-key encoding
+# ---------------------------------------------------------------------------
+
+
+def _attr_widths(spec: JoinSpec) -> Dict[str, int]:
+    """Per-attribute mixed-radix width over *all* relations of the join.
+
+    Using the join-wide width (not the per-relation one) makes the packing a
+    single injective code over the joint domain, so a parent-side query key
+    and a child-side index key for the same tuple of values always coincide.
+    """
+    widths: Dict[str, int] = {}
+    for node in spec.nodes:
+        for a, c in node.relation.columns.items():
+            lo = int(c.min(initial=0))
+            if lo < 0:
+                raise ValueError(
+                    f"jax backend: attribute {a!r} of {node.relation.name!r} "
+                    "has negative values; device engine requires non-negative "
+                    "dict-encoded columns")
+            hi = int(c.max(initial=0))
+            widths[a] = max(widths.get(a, 1), hi + 1)
+    return widths
+
+
+def _pack_np(cols: Sequence[np.ndarray], radices: Sequence[int]) -> np.ndarray:
+    key = np.zeros(np.asarray(cols[0]).shape[0], dtype=np.int64)
+    for c, w in zip(cols, radices):
+        key = key * np.int64(w) + np.asarray(c, np.int64)
+    return key
+
+
+def _pack_jnp(rows: Dict[str, jnp.ndarray], attrs: Sequence[str],
+              radices: Sequence[int]) -> jnp.ndarray:
+    key = jnp.zeros(rows[attrs[0]].shape[0], dtype=jnp.int32)
+    for a, w in zip(attrs, radices):
+        key = key * jnp.int32(w) + rows[a]
+    return key
+
+
+def _as_i32(col: np.ndarray, what: str) -> np.ndarray:
+    col = np.asarray(col, np.int64)
+    if col.size and (int(col.min()) < 0 or int(col.max()) >= _I32_LIM):
+        raise ValueError(f"jax backend: {what} outside int32 domain "
+                         "(re-encode the dictionary or use backend='numpy')")
+    return col.astype(np.int32)
+
+
+def _inverse_cdf_pick(prefix: jnp.ndarray, lo, hi, u):
+    """Weighted pick within [lo, hi) via prefix sums (vectorised)."""
+    tot = prefix[hi] - prefix[lo]
+    tgt = prefix[lo] + u * jnp.maximum(tot, 1e-30)
+    pos = jnp.searchsorted(prefix, tgt, side="right") - 1
+    pos = jnp.clip(pos, lo, jnp.maximum(hi - 1, lo))
+    return pos, tot > 0
+
+
+# ---------------------------------------------------------------------------
+# Device-resident tree join (generalised EW candidate source)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class _NodeCfg:
+    alias: str
+    edge_attrs: Tuple[str, ...]
+    radices: Tuple[int, ...]
+    new_attrs: Tuple[str, ...]
+
+
+class DeviceTreeJoin:
+    """Acyclic join prepared for jitted EW sampling (chains are a special case)."""
+
+    def __init__(self, cat: Catalog, spec: JoinSpec,
+                 use_pallas: Optional[bool] = None):
+        if spec.is_cyclic:
+            raise ValueError(
+                f"jax backend: join {spec.name!r} is cyclic; the device tree "
+                "engine handles acyclic joins only (use backend='numpy')")
+        if use_pallas is None:
+            from ...kernels.ops import on_tpu
+            use_pallas = on_tpu()
+        self.use_pallas = bool(use_pallas)
+        self.name = spec.name
+        self.spec = spec
+        self.attrs = tuple(spec.output_attrs)
+
+        js = JoinSampler(cat, spec, method="ew")  # reuse host weight computation
+        widths = _attr_widths(spec)
+        self.node_cfgs: List[_NodeCfg] = []
+        self.sorted_keys: List[jnp.ndarray] = []
+        self.perm: List[jnp.ndarray] = []
+        self.wprefix: List[jnp.ndarray] = []
+        self.cols: List[Dict[str, jnp.ndarray]] = []
+        self._prepped: List[object] = []
+
+        produced = set(js.root_rel.attrs)
+        for n in js.order[1:]:
+            rel = js._reduced[n.alias]
+            radices = tuple(widths[a] for a in n.edge_attrs)
+            dom = 1
+            for w in radices:
+                dom *= w
+            if dom >= _I32_LIM:
+                raise ValueError(
+                    f"jax backend: packed edge-key domain of node {n.alias!r} "
+                    f"({dom}) exceeds int32; use backend='numpy'")
+            key = _pack_np([rel.columns[a] for a in n.edge_attrs], radices)
+            perm = np.argsort(key, kind="stable")
+            skeys = key[perm].astype(np.int32)
+            w = js.node_weights[n.alias]
+            wp = np.zeros(rel.nrows + 1, dtype=np.float64)
+            np.cumsum(w[perm], out=wp[1:])
+            new_attrs = tuple(a for a in rel.attrs if a not in produced)
+            produced.update(rel.attrs)
+            self.node_cfgs.append(_NodeCfg(n.alias, tuple(n.edge_attrs),
+                                           radices, new_attrs))
+            self.sorted_keys.append(jnp.asarray(skeys))
+            self.perm.append(jnp.asarray(perm.astype(np.int32)))
+            self.wprefix.append(jnp.asarray(wp, jnp.float32))
+            self.cols.append({a: jnp.asarray(_as_i32(c, f"{rel.name}.{a}"))
+                              for a, c in rel.columns.items() if a in new_attrs})
+            if self.use_pallas:
+                from ...kernels.searchsorted import PreparedKeys
+                self._prepped.append(PreparedKeys(key[perm]))
+            else:
+                self._prepped.append(None)
+
+        self.root_cols = {a: jnp.asarray(_as_i32(c, f"root.{a}"))
+                          for a, c in js.root_rel.columns.items()}
+        self.root_wprefix = jnp.asarray(js.root_weight_prefix, jnp.float32)
+        self.total_weight = float(js.root_weight_total)
+        self.n_root = js.root_rel.nrows
+        self._empty = js.is_empty()
+
+    def is_empty(self) -> bool:
+        return self._empty
+
+    # -- range probe: jnp.searchsorted, or the two-phase Pallas pipeline ------
+    def _ranges(self, i: int, q: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        if not self.use_pallas:
+            sk = self.sorted_keys[i]
+            return (jnp.searchsorted(sk, q, side="left").astype(jnp.int32),
+                    jnp.searchsorted(sk, q, side="right").astype(jnp.int32))
+        from ...kernels.ops import default_interpret
+        from ...kernels.searchsorted import QUERY_TILE, _searchsorted_i32
+        prep = self._prepped[i]
+        b = q.shape[0]
+        pad = (-b) % QUERY_TILE
+        qp = jnp.pad(q, (0, pad))
+        qt = qp.shape[0] // QUERY_TILE
+        # keys are non-negative int32, so the 64-bit split is (hi=0, lo=q^MIN)
+        q_lo = (qp ^ jnp.int32(-(1 << 31))).reshape(qt, QUERY_TILE)
+        q_hi = jnp.zeros_like(q_lo)
+        lo, hi = _searchsorted_i32(q_hi, q_lo, prep.f_hi2, prep.f_lo2,
+                                   prep.keys2d_hi, prep.keys2d_lo,
+                                   n_chunks=prep.n_chunks,
+                                   n_fences=prep.n_blocks,
+                                   interpret=default_interpret())
+        n = jnp.int32(prep.n)
+        return (jnp.minimum(lo.reshape(-1)[:b], n),
+                jnp.minimum(hi.reshape(-1)[:b], n))
+
+    # -- one batch of EW tree draws (traced; jit at the call site) ------------
+    def draw(self, key: jax.Array, batch: int
+             ) -> Tuple[Dict[str, jnp.ndarray], jnp.ndarray]:
+        keys = jax.random.split(key, len(self.node_cfgs) + 1)
+        u0 = jax.random.uniform(keys[0], (batch,))
+        r_pos, ok = _inverse_cdf_pick(
+            self.root_wprefix, jnp.zeros((batch,), jnp.int32),
+            jnp.full((batch,), self.n_root, jnp.int32), u0)
+        rows = {a: c[r_pos] for a, c in self.root_cols.items()}
+        for i, cfg in enumerate(self.node_cfgs):
+            q = _pack_jnp(rows, cfg.edge_attrs, cfg.radices)
+            lo, hi = self._ranges(i, q)
+            u = jax.random.uniform(keys[i + 1], (batch,))
+            pos, alive = _inverse_cdf_pick(self.wprefix[i], lo, hi, u)
+            ok = ok & alive & (hi > lo)
+            child = self.perm[i][jnp.clip(pos, 0, self.perm[i].shape[0] - 1)]
+            for a, c in self.cols[i].items():
+                rows[a] = c[child]
+        return rows, ok
+
+
+# ---------------------------------------------------------------------------
+# Device-resident membership (sorted-row-fingerprint lookups)
+# ---------------------------------------------------------------------------
+
+
+class DeviceJoinMembership:
+    """Batched 'is tuple in join J' probes on device.
+
+    Mirrors the host :class:`~repro.core.membership.MembershipProber`
+    semantics: a tuple is in the join iff every base relation contains the
+    tuple's projection onto that relation's attributes (the shared output
+    schema makes connectivity automatic).
+    """
+
+    def __init__(self, spec: JoinSpec):
+        self.join_name = spec.name
+        # (attrs, sorted_fp1, fp2_in_fp1_order, kmax, nrows) per base relation
+        self.rels: List[Tuple[Tuple[str, ...], jnp.ndarray, jnp.ndarray,
+                              int, int]] = []
+        seen = set()
+        for node in spec.nodes:
+            rel = node.relation
+            attrs = tuple(sorted(rel.attrs))
+            # dedup on the host Catalog.rowset cache key, so repeated nodes
+            # over one relation build one index but distinct relations that
+            # merely share a name are still probed (host parity)
+            if (rel.name, attrs) in seen:
+                continue
+            seen.add((rel.name, attrs))
+            for a in attrs:
+                _as_i32(rel.columns[a], f"{rel.name}.{a}")  # domain check
+            fp1 = fp32_np([rel.columns[a] for a in attrs], salt=1)
+            fp2 = fp32_np([rel.columns[a] for a in attrs], salt=2)
+            order = np.argsort(fp1, kind="stable")
+            s1 = fp1[order]
+            if s1.shape[0]:
+                _, counts = np.unique(s1, return_counts=True)
+                kmax = int(counts.max())
+            else:
+                kmax = 0
+            self.rels.append((attrs, jnp.asarray(s1), jnp.asarray(fp2[order]),
+                              kmax, int(rel.nrows)))
+
+    def contains(self, rows: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+        """Traced probe: rows are device int32 columns of the output schema."""
+        b = rows[next(iter(rows))].shape[0]
+        res = jnp.ones((b,), bool)
+        for attrs, s1, s2, kmax, n in self.rels:
+            if n == 0:
+                return jnp.zeros((b,), bool)
+            q1 = fp32_jnp([rows[a] for a in attrs], salt=1)
+            q2 = fp32_jnp([rows[a] for a in attrs], salt=2)
+            lo = jnp.searchsorted(s1, q1, side="left")
+            m = jnp.zeros((b,), bool)
+            for k in range(kmax):  # duplicate window (kmax is tiny, static)
+                pos = jnp.minimum(lo + k, n - 1)
+                m = m | ((lo + k < n) & (s1[pos] == q1) & (s2[pos] == q2))
+            res = res & m
+        return res
+
+
+# ---------------------------------------------------------------------------
+# Backend protocol implementations
+# ---------------------------------------------------------------------------
+
+
+class JaxCandidateSource:
+    """CandidateSource over a :class:`DeviceTreeJoin`.
+
+    Carries its own PRNG key; the host ``rng`` argument of ``draw`` is
+    ignored (documented deviation — the numpy and jax engines are
+    distributionally, not bitwise, equivalent).
+    """
+
+    def __init__(self, tree: DeviceTreeJoin, seed: int = 0,
+                 device_batch: int = 4096):
+        self.join_name = tree.name
+        self.tree = tree
+        self.attrs = tree.attrs
+        self.key = jax.random.PRNGKey(seed)
+        self._batch = int(device_batch)
+        self._draw_jit = jax.jit(functools.partial(tree.draw,
+                                                   batch=self._batch))
+        # buffer of accepted-but-unserved rows: device rounds are fixed-width,
+        # so small draws (OnlineUnionSampler asks for 1 at a time) are served
+        # from the remainder of the last round instead of a fresh round each.
+        self._buf: Optional[Rows] = None
+        self._buf_pos = 0
+
+    def is_empty(self) -> bool:
+        return self.tree.is_empty()
+
+    def _refill(self) -> int:
+        """One device round into the buffer; returns rows banked."""
+        self.key, sub = jax.random.split(self.key)
+        rows, ok = self._draw_jit(sub)
+        idx = np.nonzero(np.asarray(ok))[0]
+        self._buf = {a: np.asarray(rows[a])[idx].astype(np.int64)
+                     for a in self.attrs}
+        self._buf_pos = 0
+        return int(idx.shape[0])
+
+    def draw(self, rng: np.random.Generator, count: int,
+             batch: Optional[int] = None) -> Tuple[Rows, int]:
+        if self.is_empty():
+            raise EmptyJoinError(f"join {self.join_name!r} is empty")
+        got: List[Rows] = []
+        draws = 0
+        have = 0
+        # round budget scales with the request (device rounds are fixed-width;
+        # the numpy source instead grows its batch with `count`)
+        max_rounds = 1000 + 20 * (count // self._batch + 1)
+        for _ in range(max_rounds):
+            if self._buf is None or self._buf_pos >= rows_length(self._buf):
+                draws += self._batch
+                if self._refill() == 0:
+                    continue
+            lo = self._buf_pos
+            hi = min(lo + count - have, rows_length(self._buf))
+            got.append({a: c[lo:hi] for a, c in self._buf.items()})
+            self._buf_pos = hi
+            have += hi - lo
+            if have >= count:
+                break
+        else:
+            raise RuntimeError(f"JaxCandidateSource({self.join_name}): "
+                               "round budget exhausted")
+        return ({a: np.concatenate([g[a] for g in got])
+                 for a in self.attrs}, draws)
+
+
+class JaxMembershipOracle:
+    """MembershipOracle facade over per-join device membership indexes.
+
+    Host-facing: accepts numpy rows, pads to power-of-two buckets (bounding
+    the number of jit retraces), probes on device, returns numpy booleans.
+    """
+
+    def __init__(self, members: Dict[str, DeviceJoinMembership],
+                 output_attrs: Sequence[str]):
+        self.members = members
+        self.output_attrs = list(output_attrs)
+        self._fns = {name: jax.jit(m.contains) for name, m in members.items()}
+
+    @staticmethod
+    def _bucket(n: int) -> int:
+        b = 256
+        while b < n:
+            b <<= 1
+        return b
+
+    def contains(self, join_name: str, rows: Rows) -> np.ndarray:
+        n = rows_length(rows)
+        if n == 0:
+            return np.zeros(0, dtype=bool)
+        p = self._bucket(n)
+        dev = {a: jnp.asarray(np.pad(_as_i32(np.asarray(rows[a])[:n],
+                                             f"probe.{a}"), (0, p - n)))
+               for a in self.output_attrs}
+        out = self._fns[join_name](dev)
+        return np.asarray(out)[:n]
+
+    def membership_matrix(self, rows: Rows,
+                          join_names: Optional[Sequence[str]] = None
+                          ) -> np.ndarray:
+        names = list(join_names) if join_names is not None else list(self.members)
+        return np.stack([self.contains(nm, rows) for nm in names], axis=1)
+
+
+class JaxBackend(Backend):
+    """Device-resident engine: tree candidate sources + membership indexes."""
+
+    name = "jax"
+
+    def __init__(self, cat: Catalog, joins: Sequence[JoinSpec],
+                 join_method: str = "ew", seed: int = 0,
+                 device_batch: int = 4096,
+                 use_pallas: Optional[bool] = None):
+        if join_method != "ew":
+            raise ValueError("jax backend: only method='ew' runs on device "
+                             "(eo/wj walks stay on the numpy backend)")
+        self.cat = cat
+        self.joins = list(joins)
+        schemas = {tuple(sorted(j.output_attrs)) for j in self.joins}
+        if len(schemas) > 1:
+            raise ValueError(
+                f"joins must share an output schema; got {sorted(schemas)}")
+        self.attrs = list(self.joins[0].output_attrs)
+        self.trees: Dict[str, DeviceTreeJoin] = {
+            j.name: DeviceTreeJoin(cat, j, use_pallas=use_pallas)
+            for j in self.joins}
+        self.members: Dict[str, DeviceJoinMembership] = {
+            j.name: DeviceJoinMembership(j) for j in self.joins}
+        self._sources = {
+            j.name: JaxCandidateSource(self.trees[j.name], seed=seed + i,
+                                       device_batch=device_batch)
+            for i, j in enumerate(self.joins)}
+        self._oracle = JaxMembershipOracle(self.members, self.attrs)
+
+    def source(self, join_name: str) -> JaxCandidateSource:
+        return self._sources[join_name]
+
+    def oracle(self) -> JaxMembershipOracle:
+        return self._oracle
+
+    def supports_fused_rounds(self) -> bool:
+        return True
+
+
+# ---------------------------------------------------------------------------
+# Fused Algorithm-1 round
+# ---------------------------------------------------------------------------
+
+
+class JaxUnionSampler:
+    """One whole Algorithm-1 top-up round as a single jitted program.
+
+    Per round (``round_batch`` candidates per join, fixed shapes):
+
+    1. **multinomial cover selection** — per-slot categorical on the piece
+       probabilities, histogrammed into per-piece targets (an i.i.d.
+       factorisation of the host path's multinomial) and added to the
+       shortfall carried from earlier rounds,
+    2. **candidate generation for all joins** — one batched EW tree draw per
+       join,
+    3. **cover-membership acceptance** — a candidate of piece ``j`` survives
+       iff no earlier cover piece contains it (batched device probes),
+    4. **compaction** — accepted candidates sorted to the front per join;
+       the round emits ``min(target_j, accepted_j)`` of them and returns the
+       per-piece shortfall.
+
+    Crucially the shortfall of piece ``j`` stays *assigned to piece j* across
+    rounds (it is carried, never re-drawn from the selection distribution):
+    re-selecting a piece after a rejection is the printed-pseudocode pitfall
+    documented in union_sampler.  Since each round's accepted candidates are
+    i.i.d. uniform over their piece, the host also banks the surplus
+    (accepted beyond ``target_j``) and serves later targets from it before
+    asking the device again — this is what makes the engine a streaming
+    source for serving.
+
+    The host loop only tracks the shortfall vector, drains surplus, zeroes
+    pieces that repeatedly yield nothing (estimation noise gave a positive
+    size to an empty piece) and stops at ``n`` accepted samples.
+    """
+
+    def __init__(self, backend: JaxBackend, cover, seed: int = 0,
+                 round_batch: int = 4096,
+                 dead_rounds: int = 8, max_rounds: int = 4096,
+                 surplus_cap: Optional[int] = None, stats=None):
+        self.backend = backend
+        self.cover = cover
+        self.order = list(cover.order)
+        self.trees = [backend.trees[n] for n in self.order]
+        self.members = [backend.members[n] for n in self.order]
+        self.attrs = tuple(backend.attrs)
+        self.key = jax.random.PRNGKey(seed)
+        self.host_rng = np.random.default_rng(seed)
+        self.round_batch = int(round_batch)
+        self.dead_rounds = int(dead_rounds)
+        self.max_rounds = int(max_rounds)
+        self.surplus_cap = (8 * self.round_batch if surplus_cap is None
+                            else int(surplus_cap))
+        if stats is None:
+            from ..union_sampler import SamplerStats
+            stats = SamplerStats()
+        self.stats = stats
+        self._round_jit = jax.jit(self._round_impl)
+        # per-piece surplus bank: accepted-but-not-yet-emitted piece samples
+        self._bank: List[List[Rows]] = [[] for _ in self.order]
+        self._bank_n = np.zeros(len(self.order), dtype=np.int64)
+        # dead-piece state persists across sample() calls (the cover is
+        # fixed per engine; rediscovering empty pieces per call would cost
+        # dead_rounds device rounds on every request)
+        self._dead: set = set()
+        self._streak = np.zeros(len(self.order), dtype=np.int64)
+
+    # -- the fused program ----------------------------------------------------
+    def _round_impl(self, probs_cum: jnp.ndarray, carry_need: jnp.ndarray,
+                    extra_target: jnp.ndarray, key: jax.Array):
+        batch, nj = self.round_batch, len(self.trees)
+        kpick, *jks = jax.random.split(key, nj + 1)
+        # (1) multinomial cover selection: categorical picks → histogram
+        u = jax.random.uniform(kpick, (batch,))
+        pick = jnp.clip(jnp.searchsorted(probs_cum, u, side="right"
+                                         ).astype(jnp.int32), 0, nj - 1)
+        valid = (jnp.arange(batch) < extra_target).astype(jnp.int32)
+        need = carry_need + jnp.zeros((nj,), jnp.int32).at[pick].add(valid)
+        # (2)+(3) per join: batched candidate draw + earlier-piece rejection
+        out_cols = []
+        ok_counts = []
+        acc_counts = []
+        for j, tree in enumerate(self.trees):
+            rows, ok = tree.draw(jks[j], batch)
+            acc = ok
+            for q in range(j):             # pieces earlier in cover order
+                acc = acc & ~self.members[q].contains(rows)
+            # (4) compaction: accepted candidates first, original slot order
+            perm = jnp.argsort(~acc)
+            out_cols.append(tuple(rows[a][perm] for a in self.attrs))
+            ok_counts.append(jnp.sum(ok))
+            acc_counts.append(jnp.sum(acc))
+        ok_counts = jnp.stack(ok_counts).astype(jnp.int32)
+        acc_counts = jnp.stack(acc_counts).astype(jnp.int32)
+        take = jnp.minimum(need, acc_counts)
+        shortfall = need - take
+        return out_cols, ok_counts, acc_counts, take, shortfall
+
+    # -- host top-up loop -----------------------------------------------------
+    def _drain_bank(self, j: int, want: int, parts, homes) -> int:
+        """Emit up to ``want`` banked piece-``j`` samples; returns count."""
+        got = 0
+        while got < want and self._bank[j]:
+            rows = self._bank[j][0]
+            k = rows_length(rows)
+            use = min(k, want - got)
+            parts.append({a: rows[a][:use] for a in self.attrs})
+            homes.append(np.full(use, j, dtype=np.int64))
+            if use == k:
+                self._bank[j].pop(0)
+            else:
+                self._bank[j][0] = {a: rows[a][use:] for a in self.attrs}
+            self._bank_n[j] -= use
+            got += use
+        return got
+
+    def sample(self, n: int):
+        from ..union_sampler import SampleSet, empty_sample_set
+        if n <= 0:
+            return empty_sample_set(list(self.attrs), self.stats)
+        nj = len(self.order)
+        base = np.maximum(np.asarray(self.cover.selection_probs(), np.float64), 0)
+        streak, dead = self._streak, self._dead
+        parts: List[Rows] = []
+        homes: List[np.ndarray] = []
+        owed = np.zeros(nj, dtype=np.int64)   # per-piece carried shortfall
+        total = 0
+        rounds = 0
+        while total < n:
+            rounds += 1
+            if rounds > self.max_rounds:
+                raise RuntimeError("JaxUnionSampler: top-up budget exhausted")
+            p = base.copy()
+            for j in dead:
+                p[j] = 0.0
+            s = p.sum()
+            if s <= 0:
+                raise RuntimeError("all cover pieces unreachable")
+            p /= s
+            # assign banked surplus to fresh targets (host multinomial — the
+            # same selection law; piece counts stay multinomial under p)
+            bank_total = int(self._bank_n.sum())
+            unassigned = n - total - int(owed.sum())
+            if bank_total > 0 and unassigned > 0:
+                owed += self.host_rng.multinomial(min(unassigned, bank_total), p)
+            # serve carried per-piece targets from the surplus bank first
+            for j in range(nj):
+                if owed[j] and self._bank_n[j]:
+                    got = self._drain_bank(j, int(owed[j]), parts, homes)
+                    owed[j] -= got
+                    total += got
+            if total >= n:
+                break
+            unassigned = n - total - int(owed.sum())
+            extra = max(0, min(unassigned, self.round_batch))
+            self.key, sub = jax.random.split(self.key)
+            out_cols, ok_counts, acc_counts, take, shortfall = self._round_jit(
+                jnp.asarray(np.cumsum(p), jnp.float32),
+                jnp.asarray(np.minimum(owed, np.iinfo(np.int32).max),
+                            jnp.int32),
+                jnp.int32(extra), sub)
+            ok_counts = np.asarray(ok_counts)
+            acc_counts = np.asarray(acc_counts)
+            take = np.asarray(take)
+            shortfall = np.asarray(shortfall)
+            self.stats.iterations += self.round_batch * nj
+            self.stats.candidate_draws += self.round_batch * nj
+            # membership rejections only (dead walks are not cover rejects)
+            self.stats.cover_rejects += int(ok_counts.sum() - acc_counts.sum())
+            for j in range(nj):
+                t = int(take[j])
+                a_j = int(acc_counts[j])
+                if t:
+                    cols = out_cols[j]
+                    parts.append({a: np.asarray(c)[:t].astype(np.int64)
+                                  for a, c in zip(self.attrs, cols)})
+                    homes.append(np.full(t, j, dtype=np.int64))
+                    total += t
+                # bank the surplus accepted candidates for later targets
+                if a_j > t and self._bank_n[j] < self.surplus_cap:
+                    cols = out_cols[j]
+                    self._bank[j].append(
+                        {a: np.asarray(c)[t:a_j].astype(np.int64)
+                         for a, c in zip(self.attrs, cols)})
+                    self._bank_n[j] += a_j - t
+            owed = shortfall.astype(np.int64)
+            # dead-piece detection: a piece that keeps a target but never
+            # accepts is empty in reality (estimation noise) — drop it.
+            for j in range(nj):
+                if j in dead:
+                    # float32-cumsum clipping can still assign stray picks to
+                    # a dead piece; return them to the unassigned pool
+                    if owed[j]:
+                        self.stats.dropped_slots += int(owed[j])
+                        owed[j] = 0
+                    continue
+                if owed[j] > 0 and acc_counts[j] == 0 and self._bank_n[j] == 0:
+                    streak[j] += 1
+                    if streak[j] >= self.dead_rounds:
+                        dead.add(j)
+                        self.stats.dropped_slots += int(owed[j])
+                        owed[j] = 0
+                else:
+                    streak[j] = 0
+        rows = {a: np.concatenate([g[a] for g in parts])[:n] for a in self.attrs}
+        home = np.concatenate(homes)[:n]
+        shuffle = self.host_rng.permutation(n)
+        rows = {a: c[shuffle] for a, c in rows.items()}
+        from ..relation import fingerprint128
+        fp = fingerprint128([rows[a] for a in sorted(self.attrs)])
+        return SampleSet(list(self.attrs), rows, home[shuffle], fp, self.stats)

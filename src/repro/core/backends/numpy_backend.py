@@ -1,0 +1,63 @@
+"""Host (numpy) backend — the reference engine, extracted from the per-join
+machinery the union samplers used to instantiate directly.
+
+* Candidate draws delegate to :class:`repro.core.join_sampler.JoinSampler`
+  (EW/EO batched walks).
+* Membership probes delegate to
+  :class:`repro.core.membership.MembershipProber` (128-bit fingerprint
+  row-set indexes), which already satisfies the
+  :class:`~repro.core.backends.base.MembershipOracle` protocol.
+
+This backend is behaviour-identical to the pre-backend-layer code path: it
+draws from the caller's ``rng`` in the same order with the same batch sizes,
+so seeded runs reproduce bit-for-bit.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..index import Catalog
+from ..join_sampler import JoinSampler
+from ..joins import JoinSpec
+from ..membership import MembershipProber
+from .base import Backend, Rows
+
+
+class NumpyCandidateSource:
+    """Uniform candidate draws via the host batched-walk sampler."""
+
+    def __init__(self, cat: Catalog, spec: JoinSpec, method: str = "ew"):
+        self.join_name = spec.name
+        self.sampler = JoinSampler(cat, spec, method=method)
+
+    def draw(self, rng: np.random.Generator, count: int,
+             batch: Optional[int] = None) -> Tuple[Rows, int]:
+        if batch is None:
+            batch = max(count, 64)
+        return self.sampler.sample_uniform(rng, count, batch=batch)
+
+    def is_empty(self) -> bool:
+        return self.sampler.is_empty()
+
+
+class NumpyBackend(Backend):
+    name = "numpy"
+
+    def __init__(self, cat: Catalog, joins: Sequence[JoinSpec],
+                 join_method: str = "ew", seed: int = 0):
+        self.cat = cat
+        self.joins = list(joins)
+        self._sources: Dict[str, NumpyCandidateSource] = {
+            j.name: NumpyCandidateSource(cat, j, method=join_method)
+            for j in self.joins
+        }
+        self._oracle = MembershipProber(cat, self.joins)
+
+    def source(self, join_name: str) -> NumpyCandidateSource:
+        return self._sources[join_name]
+
+    def oracle(self) -> MembershipProber:
+        return self._oracle

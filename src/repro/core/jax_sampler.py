@@ -1,146 +1,63 @@
 """Fully-jitted batched chain-join sampling (the device path of the sampler).
 
-The numpy samplers in :mod:`join_sampler` are the host reference; this module
-is the TPU-resident pipeline for chain joins (UQ1/UQ2's shape — the paper's
-§5.1 base case): relations live on device as sorted columns + prefix-summed
-exact weights, and one ``sample_batch`` is a single jitted program:
-
-    root draw (prefix-sum inverse-CDF)                         [kernel: choice]
-    per hop:  searchsorted(lo,hi) → ranged weighted pick       [kernel: walk]
-    gathers of payload columns
-
-Everything is ``jax.lax`` control flow over fixed shapes — no host round
-trips per hop — so the sampler can run *inside* the training program (e.g.
-fused with the input pipeline on the host-offload core of each chip, or on
-dedicated sampler chips at pod scale; DESIGN §2/§5).
+Historically this module carried its own chain-only device pipeline; the
+engine now lives in :mod:`repro.core.backends.jax_backend` as
+:class:`DeviceTreeJoin`, which generalises the same root-draw → per-hop
+``searchsorted`` → ranged-weighted-pick program from single-attribute chains
+to arbitrary acyclic joins (composite mixed-radix edge keys, per-node child
+picks).  :class:`JaxChainSampler` is kept as the chain-shaped façade: same
+API, same chain-only validation, one jitted program per batch with no host
+round trips per hop — so the sampler can run inside the training program
+(fused with the input pipeline, or on dedicated sampler chips at pod scale).
 
 Equivalence with the host sampler is property-tested
-(tests/test_jax_sampler.py: identical distribution, exact EW totals).
+(tests/test_jax_sampler.py: identical distribution, exact EW totals; the
+tree generalisation is covered by tests/test_backends.py).
 """
 
 from __future__ import annotations
 
-import dataclasses
 import functools
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Tuple
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from .index import Catalog
 from .joins import JoinSpec
-from .relation import combine_columns
 
-
-@dataclasses.dataclass
-class DeviceChain:
-    """Device-resident chain-join state for EW sampling."""
-
-    # per hop i (0..m-2): child relation's sorted-by-key data
-    sorted_keys: List[jnp.ndarray]       # (n_i,) int64-as-2xint32? use int32 domain
-    perm: List[jnp.ndarray]              # (n_i,) int32 row ids in key order
-    wprefix: List[jnp.ndarray]           # (n_i+1,) float32 prefix sums of child weights
-    child_cols: List[Dict[str, jnp.ndarray]]   # payload columns per child
-    root_cols: Dict[str, jnp.ndarray]
-    root_wprefix: jnp.ndarray            # (n_0+1,)
-    edge_attrs: List[str]
-    total_weight: float
-
-
-def build_device_chain(cat: Catalog, spec: JoinSpec) -> DeviceChain:
-    """Prepare a chain join for the jitted sampler (EW weights, prefix sums)."""
-    if spec.is_cyclic or not spec.is_chain:
-        raise ValueError("device sampler: chain joins only (use the host "
-                         "sampler for trees/cyclic)")
-    from .join_sampler import JoinSampler
-    js = JoinSampler(cat, spec, method="ew")   # reuse host weight computation
-    order = js.order
-    sorted_keys, perm, wprefix, child_cols, edge_attrs = [], [], [], [], []
-    for n in order[1:]:
-        plan = js.edges[n.alias]
-        sorted_keys.append(jnp.asarray(plan.index.sorted_vals))
-        perm.append(jnp.asarray(plan.index.perm, jnp.int32))
-        wprefix.append(jnp.asarray(plan.weight_prefix, jnp.float32))
-        rel = js._reduced[n.alias]
-        child_cols.append({a: jnp.asarray(c) for a, c in rel.columns.items()})
-        edge_attrs.append(n.edge_attrs[0] if len(n.edge_attrs) == 1 else None)
-        if edge_attrs[-1] is None:
-            raise ValueError("device sampler: single-attribute edges only")
-    root_rel = js.root_rel
-    return DeviceChain(
-        sorted_keys, perm, wprefix,
-        child_cols,
-        {a: jnp.asarray(c) for a, c in root_rel.columns.items()},
-        jnp.asarray(js.root_weight_prefix, jnp.float32),
-        edge_attrs,
-        float(js.root_weight_total),
-    )
-
-
-def _inverse_cdf_pick(prefix: jnp.ndarray, lo, hi, u):
-    """Weighted pick within [lo, hi) via prefix sums (vectorised)."""
-    tot = prefix[hi] - prefix[lo]
-    tgt = prefix[lo] + u * jnp.maximum(tot, 1e-30)
-    pos = jnp.searchsorted(prefix, tgt, side="right") - 1
-    pos = jnp.clip(pos, lo, jnp.maximum(hi - 1, lo))
-    return pos, tot > 0
-
-
-@functools.partial(jax.jit, static_argnames=("batch", "n_hops", "attrs",
-                                              "edge_attrs"))
-def _sample_chain(chain_flat, batch: int, n_hops: int, attrs: Tuple[str, ...],
-                  edge_attrs: Tuple[str, ...], key: jax.Array):
-    """One jitted batch of EW chain samples. Returns (rows, ok)."""
-    (sorted_keys, perm, wprefix, child_cols, root_cols,
-     root_wprefix) = chain_flat
-    keys = jax.random.split(key, n_hops + 1)
-
-    # root: inverse-CDF on the root weight prefix
-    u0 = jax.random.uniform(keys[0], (batch,))
-    n0 = root_wprefix.shape[0] - 1
-    r_pos, ok = _inverse_cdf_pick(root_wprefix, jnp.zeros((batch,), jnp.int32),
-                                  jnp.full((batch,), n0, jnp.int32), u0)
-    rows = {a: c[r_pos] for a, c in root_cols.items()}
-
-    for i in range(n_hops):
-        ea = edge_attrs[i]
-        q = rows[ea]
-        lo = jnp.searchsorted(sorted_keys[i], q, side="left")
-        hi = jnp.searchsorted(sorted_keys[i], q, side="right")
-        u = jax.random.uniform(keys[i + 1], (batch,))
-        pos, alive = _inverse_cdf_pick(wprefix[i], lo, hi, u)
-        ok = ok & alive & (hi > lo)
-        child_rows = perm[i][jnp.clip(pos, 0, perm[i].shape[0] - 1)]
-        for a, c in child_cols[i].items():
-            if a not in rows:
-                rows[a] = c[child_rows]
-    out = tuple(rows[a] for a in attrs)
-    return out, ok
+# Re-exported for backward compatibility; the implementation moved to the
+# backend layer.
+from .backends.jax_backend import DeviceTreeJoin, _inverse_cdf_pick  # noqa: F401
 
 
 class JaxChainSampler:
     """Jitted EW sampler over a chain join (uniform, zero rejection)."""
 
     def __init__(self, cat: Catalog, spec: JoinSpec, seed: int = 0):
+        if spec.is_cyclic or not spec.is_chain:
+            raise ValueError("device sampler: chain joins only (use the tree "
+                             "engine in repro.core.backends.jax_backend for "
+                             "acyclic non-chain joins)")
         self.spec = spec
-        self.chain = build_device_chain(cat, spec)
+        self.tree = DeviceTreeJoin(cat, spec)
         self.attrs = tuple(spec.output_attrs)
-        self.n_hops = len(self.chain.sorted_keys)
+        self.n_hops = len(self.tree.node_cfgs)
         self.key = jax.random.PRNGKey(seed)
-        self.total_weight = self.chain.total_weight
+        self.total_weight = self.tree.total_weight
+        self._draw_jits: Dict[int, object] = {}
 
-    def _flat(self):
-        c = self.chain
-        return (c.sorted_keys, c.perm, c.wprefix, c.child_cols, c.root_cols,
-                c.root_wprefix)
+    def _draw_fn(self, batch: int):
+        if batch not in self._draw_jits:
+            self._draw_jits[batch] = jax.jit(
+                functools.partial(self.tree.draw, batch=batch))
+        return self._draw_jits[batch]
 
     def sample_batch(self, batch: int) -> Tuple[Dict[str, np.ndarray], np.ndarray]:
         self.key, sub = jax.random.split(self.key)
-        out, ok = _sample_chain(self._flat(), batch, self.n_hops, self.attrs,
-                                tuple(self.chain.edge_attrs), sub)
-        rows = {a: np.asarray(v) for a, v in zip(self.attrs, out)}
-        return rows, np.asarray(ok)
+        rows, ok = self._draw_fn(batch)(sub)
+        return ({a: np.asarray(rows[a]).astype(np.int64) for a in self.attrs},
+                np.asarray(ok))
 
     def sample_uniform(self, n: int, batch: int = 4096,
                        max_rounds: int = 1000) -> Dict[str, np.ndarray]:

@@ -26,13 +26,13 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .backends import Backend, get_backend
 from .cover import Cover, build_cover
 from .framework import estimate_union, warmup
 from .index import Catalog
 from .joins import JoinSpec
-from .join_sampler import JoinSampler
 from .koverlap import OverlapOracle
-from .membership import MembershipProber, rows_subset
+from .membership import rows_subset
 from .overlap import RandomWalkOverlap
 from .relation import fingerprint128
 from .union_sampler import SampleSet, SamplerStats
@@ -55,11 +55,14 @@ class OnlineUnionSampler:
                  target_rel_halfwidth: float = 0.15,
                  join_method: str = "ew", rw_batch: int = 256,
                  order: Optional[Sequence[str]] = None,
-                 warm_rounds: int = 2):
+                 warm_rounds: int = 2,
+                 backend: str | Backend = "numpy"):
         self.cat = cat
         self.joins = list(joins)
         self.names = [j.name for j in self.joins]
-        self.prober = MembershipProber(cat, self.joins)
+        self.backend = get_backend(backend, cat, self.joins, join_method=join_method,
+                                   seed=seed)
+        self.prober = self.backend.oracle()
         self.attrs = list(self.joins[0].output_attrs)
         self.rng = np.random.default_rng(seed)
         self.phi = phi
@@ -80,8 +83,8 @@ class OnlineUnionSampler:
                 self.rw.observe([j], rounds=1)
         self._refresh_pools()
 
-        self.samplers = {j.name: JoinSampler(cat, j, method=join_method)
-                         for j in self.joins}
+        self.sources = {j.name: self.backend.source(j.name)
+                        for j in self.joins}
         self._accepted: List[_Accepted] = []
         self._since_refresh = 0
         self._confident = False
@@ -217,7 +220,7 @@ class OnlineUnionSampler:
                 from .join_sampler import EmptyJoinError
                 for _ in range(retry_rounds):
                     try:
-                        rows, draws = self.samplers[name].sample_uniform(
+                        rows, draws = self.sources[name].draw(
                             self.rng, 1, batch=32)
                     except EmptyJoinError:
                         break

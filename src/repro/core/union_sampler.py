@@ -24,6 +24,13 @@
     recorded at join ``i`` is re-sampled from an earlier join ``j < i``, the
     old copies are removed from the output and the record moves to ``j``
     (Alg 1 lines 10–12).
+
+All samplers draw candidates and probe membership through the backend layer
+(:mod:`repro.core.backends`): ``backend="numpy"`` (default) is the host
+reference engine, behaviour-identical to the pre-backend code;
+``backend="jax"`` runs whole Algorithm-1 rounds as one jitted device program
+(:class:`repro.core.backends.jax_backend.JaxUnionSampler`; probe membership
+only — record/strict/predicate modes stay on the host engine).
 """
 
 from __future__ import annotations
@@ -33,11 +40,12 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .backends import Backend, get_backend
 from .cover import Cover
 from .index import Catalog
-from .join_sampler import JoinSampler
 from .joins import JoinSpec
-from .membership import MembershipProber, rows_subset
+from .membership import rows_concat, rows_subset
+from .relation import fingerprint128
 
 Rows = Dict[str, np.ndarray]
 
@@ -79,21 +87,37 @@ def _fp_to_int(fp_row: np.ndarray) -> int:
     return (int(fp_row[0]) << 64) | int(fp_row[1])
 
 
+def empty_sample_set(attrs: Sequence[str], stats: SamplerStats) -> SampleSet:
+    rows = {a: np.zeros(0, dtype=np.int64) for a in attrs}
+    fp = fingerprint128([rows[a] for a in sorted(attrs)])
+    return SampleSet(list(attrs), rows, np.zeros(0, dtype=np.int64), fp, stats)
+
+
 class DisjointUnionSampler:
     """Definition 1 — sampling the disjoint union ⨄ J_j."""
 
     def __init__(self, cat: Catalog, joins: Sequence[JoinSpec],
                  join_sizes: Dict[str, float], join_method: str = "ew",
-                 seed: int = 0):
+                 seed: int = 0, backend: str | Backend = "numpy"):
         self.joins = list(joins)
-        self.samplers = [JoinSampler(cat, j, method=join_method) for j in self.joins]
+        self.backend = get_backend(backend, cat, self.joins, join_method=join_method,
+                                   seed=seed)
+        self.sources = [self.backend.source(j.name) for j in self.joins]
         sizes = np.array([max(join_sizes[j.name], 0.0) for j in self.joins])
-        self.probs = sizes / sizes.sum()
+        total = sizes.sum()
+        if not np.isfinite(total) or total <= 0:
+            raise ValueError(
+                f"DisjointUnionSampler: degenerate join sizes {join_sizes!r} "
+                "(all zero/negative or non-finite) — cannot form a selection "
+                "distribution")
+        self.probs = sizes / total
         self.rng = np.random.default_rng(seed)
         self.attrs = list(self.joins[0].output_attrs)
         self.stats = SamplerStats()
 
     def sample(self, n: int) -> SampleSet:
+        if n <= 0:
+            return empty_sample_set(self.attrs, self.stats)
         picks = self.rng.choice(len(self.joins), size=n, p=self.probs)
         parts: List[Rows] = []
         homes: List[np.ndarray] = []
@@ -101,15 +125,14 @@ class DisjointUnionSampler:
             c = int((picks == j).sum())
             if c == 0:
                 continue
-            rows, draws = self.samplers[j].sample_uniform(self.rng, c)
+            rows, draws = self.sources[j].draw(self.rng, c, batch=1024)
             self.stats.candidate_draws += draws
             parts.append(rows)
             homes.append(np.full(c, j, dtype=np.int64))
-        rows = {a: np.concatenate([p[a] for p in parts]) for a in self.attrs}
+        rows = rows_concat(parts)
         home = np.concatenate(homes)
         perm = self.rng.permutation(n)
         rows = {a: c[perm] for a, c in rows.items()}
-        from .relation import fingerprint128
         fp = fingerprint128([rows[a] for a in sorted(self.attrs)])
         self.stats.iterations += n
         return SampleSet(self.attrs, rows, home[perm], fp, self.stats)
@@ -120,11 +143,14 @@ class BernoulliUnionSampler:
 
     def __init__(self, cat: Catalog, joins: Sequence[JoinSpec],
                  join_sizes: Dict[str, float], union_size: float,
-                 join_method: str = "ew", seed: int = 0):
+                 join_method: str = "ew", seed: int = 0,
+                 backend: str | Backend = "numpy"):
         self.cat = cat
         self.joins = list(joins)
-        self.samplers = [JoinSampler(cat, j, method=join_method) for j in self.joins]
-        self.prober = MembershipProber(cat, self.joins)
+        self.backend = get_backend(backend, cat, self.joins, join_method=join_method,
+                                   seed=seed)
+        self.sources = [self.backend.source(j.name) for j in self.joins]
+        self.prober = self.backend.oracle()
         self.sizes = np.array([max(join_sizes[j.name], 1e-12) for j in self.joins])
         self.union_size = max(union_size, self.sizes.max())
         self.rng = np.random.default_rng(seed)
@@ -132,6 +158,8 @@ class BernoulliUnionSampler:
         self.stats = SamplerStats()
 
     def sample(self, n: int, round_size: int = 256, max_rounds: int = 100_000) -> SampleSet:
+        if n <= 0:
+            return empty_sample_set(self.attrs, self.stats)
         acc_rows: List[Rows] = []
         acc_home: List[int] = []
         names = [j.name for j in self.joins]
@@ -147,7 +175,7 @@ class BernoulliUnionSampler:
                 c = int(fires[:, j].sum())
                 if c == 0:
                     continue
-                rows, draws = self.samplers[j].sample_uniform(self.rng, c)
+                rows, draws = self.sources[j].draw(self.rng, c, batch=1024)
                 self.stats.candidate_draws += draws
                 # canonical acceptance: no earlier-indexed join contains the tuple
                 keep = np.ones(c, dtype=bool)
@@ -161,9 +189,8 @@ class BernoulliUnionSampler:
                     count += kidx.shape[0]
         if count < n:
             raise RuntimeError("BernoulliUnionSampler: round budget exhausted")
-        rows = {a: np.concatenate([p[a] for p in acc_rows])[:n] for a in self.attrs}
+        rows = {a: c[:n] for a, c in rows_concat(acc_rows).items()}
         home = np.asarray(acc_home[:n], dtype=np.int64)
-        from .relation import fingerprint128
         fp = fingerprint128([rows[a] for a in sorted(self.attrs)])
         return SampleSet(self.attrs, rows, home, fp, self.stats)
 
@@ -175,7 +202,9 @@ class SetUnionSampler:
                  membership: str = "probe", join_method: str = "ew",
                  strict_paper_loop: bool = False,
                  seed: int = 0, retry_rounds: int = 64,
-                 candidate_batch: int = 32, predicate=None):
+                 candidate_batch: int = 32, predicate=None,
+                 backend: str | Backend = "numpy",
+                 round_batch: int = 4096):
         if membership not in ("probe", "record"):
             raise ValueError("membership must be 'probe' or 'record'")
         self.cat = cat
@@ -183,9 +212,10 @@ class SetUnionSampler:
         self.by_name = {j.name: j for j in self.joins}
         self.cover = cover
         self.order = list(cover.order)                      # cover order (names)
-        self.samplers = {j.name: JoinSampler(cat, j, method=join_method)
-                         for j in self.joins}
-        self.prober = MembershipProber(cat, self.joins)
+        self.backend = get_backend(backend, cat, self.joins, join_method=join_method,
+                                   seed=seed)
+        self.sources = {j.name: self.backend.source(j.name) for j in self.joins}
+        self.prober = self.backend.oracle()
         self.membership = membership
         self.strict_paper_loop = strict_paper_loop
         self.rng = np.random.default_rng(seed)
@@ -199,6 +229,22 @@ class SetUnionSampler:
         self.stats = SamplerStats()
         # record mode state: fingerprint -> home join order-index
         self._record: Dict[int, int] = {}
+        # fused device engine: one jitted program per Algorithm-1 round
+        self._engine = None
+        if self.backend.supports_fused_rounds():
+            if membership != "probe":
+                raise ValueError("membership='record' needs host bookkeeping; "
+                                 "use backend='numpy'")
+            if strict_paper_loop:
+                raise ValueError("strict_paper_loop is a host-only ablation; "
+                                 "use backend='numpy'")
+            if predicate is not None:
+                raise ValueError("rejection predicates are host objects; use "
+                                 "backend='numpy' (or pushdown() pre-filter)")
+            from .backends.jax_backend import JaxUnionSampler
+            self._engine = JaxUnionSampler(
+                self.backend, cover, seed=seed, round_batch=round_batch,
+                stats=self.stats)
 
     # ------------------------------------------------------------------ util
     def _selection_probs(self) -> np.ndarray:
@@ -210,8 +256,8 @@ class SetUnionSampler:
     def _uniform_candidates(self, name: str, count: int) -> Optional[Rows]:
         from .join_sampler import EmptyJoinError
         try:
-            rows, draws = self.samplers[name].sample_uniform(self.rng, count,
-                                                             batch=max(count, 64))
+            rows, draws = self.sources[name].draw(self.rng, count,
+                                                  batch=max(count, 64))
         except EmptyJoinError:
             # the estimate gave a positive piece size to an empty join —
             # treat the slots as dropped (estimation noise, logged)
@@ -231,6 +277,10 @@ class SetUnionSampler:
 
     # --------------------------------------------------------------- sampling
     def sample(self, n: int) -> SampleSet:
+        if n <= 0:
+            return empty_sample_set(self.attrs, self.stats)
+        if self._engine is not None:
+            return self._engine.sample(n)
         if self.membership == "probe" and not self.strict_paper_loop:
             return self._sample_probe(n)
         return self._sample_sequential(n)
@@ -250,7 +300,7 @@ class SetUnionSampler:
             if probs.sum() <= 0:
                 raise RuntimeError("all cover pieces unreachable")
             probs = probs / probs.sum()
-            need_by_join = self.rng.multinomial(target - 0, probs)
+            need_by_join = self.rng.multinomial(target, probs)
             for oidx, name in enumerate(self.order):
                 need = int(need_by_join[oidx])
                 got = 0
@@ -282,11 +332,10 @@ class SetUnionSampler:
             topups += 1
             if topups > 64 and total < n:
                 raise RuntimeError("SetUnionSampler: top-up budget exhausted")
-        rows = {a: np.concatenate([p[a] for p in acc_rows])[:n] for a in self.attrs}
+        rows = {a: c[:n] for a, c in rows_concat(acc_rows).items()}
         home = np.concatenate(acc_home)[:n]
         perm = self.rng.permutation(home.shape[0])
         rows = {a: c[perm] for a, c in rows.items()}
-        from .relation import fingerprint128
         fp = fingerprint128([rows[a] for a in sorted(self.attrs)])
         return SampleSet(self.attrs, rows, home[perm], fp, self.stats)
 
@@ -296,7 +345,6 @@ class SetUnionSampler:
         out_rows: List[Dict[str, int]] = []
         out_home: List[int] = []
         out_fp: List[int] = []
-        from .relation import fingerprint128
         guard = 0
         max_guard = max(200 * n, 10_000)
         while len(out_rows) < n:

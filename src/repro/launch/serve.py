@@ -1,11 +1,23 @@
-"""Batched serving driver: continuous-batching-lite greedy decoding.
+"""Batched serving drivers.
 
-Maintains a fixed pool of B decode slots; finished requests are replaced from
-the queue (continuous batching), each slot carrying its own length — the
-per-row ``lengths`` vector is exactly what ``decode_step`` masks on.
+Two modes:
 
-    PYTHONPATH=src python -m repro.launch.serve --arch minitron-8b --smoke \
-        --requests 8 --max-new 16
+* ``--mode lm`` (default) — continuous-batching-lite greedy decoding.
+  Maintains a fixed pool of B decode slots; finished requests are replaced
+  from the queue (continuous batching), each slot carrying its own length —
+  the per-row ``lengths`` vector is exactly what ``decode_step`` masks on.
+
+      PYTHONPATH=src python -m repro.launch.serve --arch minitron-8b --smoke \
+          --requests 8 --max-new 16
+
+* ``--mode samples`` — serve uniform union samples straight from the
+  device-resident engine (``SetUnionSampler(backend="jax")``): each request
+  asks for a batch of samples; the fused Algorithm-1 round keeps a per-piece
+  surplus bank, so steady-state requests are served from device rounds with
+  no per-request recompilation.
+
+      PYTHONPATH=src python -m repro.launch.serve --mode samples \
+          --workload UQ1 --requests 16 --samples 4096 --backend jax
 """
 
 from __future__ import annotations
@@ -18,13 +30,35 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..configs import get_config, get_smoke_config
-from ..models.serve import decode_step, init_cache
-from ..models.transformer import init_params
+
+def serve_samples(args) -> None:
+    """Union-sample serving loop from the (device) sampling engine."""
+    from ..core.framework import estimate_union, warmup
+    from ..core.union_sampler import SetUnionSampler
+    from ..data.workloads import WORKLOADS
+
+    wl = WORKLOADS[args.workload](scale=args.scale, seed=args.seed)
+    wr = warmup(wl.cat, wl.joins, method="histogram")
+    est = estimate_union(wr.oracle)
+    sampler = SetUnionSampler(wl.cat, wl.joins, est.cover, seed=args.seed,
+                              backend=args.backend,
+                              round_batch=args.round_batch)
+    sampler.sample(256)                     # warm up / compile
+    t0 = time.time()
+    served = 0
+    for rid in range(args.requests):
+        ss = sampler.sample(args.samples)
+        served += len(ss)
+    dt = time.time() - t0
+    print(f"served {args.requests} requests x {args.samples} samples "
+          f"({served} total) in {dt:.2f}s — "
+          f"{served/max(dt, 1e-9):,.0f} samples/s "
+          f"[backend={args.backend}]", flush=True)
 
 
 def main(argv: Optional[list] = None) -> None:
     ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", choices=("lm", "samples"), default="lm")
     ap.add_argument("--arch", default="minitron-8b")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--slots", type=int, default=4)
@@ -32,7 +66,21 @@ def main(argv: Optional[list] = None) -> None:
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=64)
     ap.add_argument("--seed", type=int, default=0)
+    # samples mode
+    ap.add_argument("--workload", default="UQ1")
+    ap.add_argument("--scale", type=float, default=0.1)
+    ap.add_argument("--samples", type=int, default=4096)
+    ap.add_argument("--backend", default="jax")
+    ap.add_argument("--round-batch", type=int, default=8192)
     args = ap.parse_args(argv)
+
+    if args.mode == "samples":
+        serve_samples(args)
+        return
+
+    from ..configs import get_config, get_smoke_config
+    from ..models.serve import decode_step, init_cache
+    from ..models.transformer import init_params
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     params = init_params(cfg, seed=args.seed)

@@ -1,0 +1,74 @@
+"""Hypothesis with a plain-pytest fallback.
+
+Tier-1 tests property-test with hypothesis when it is installed (see
+``requirements-dev.txt``); environments without it (minimal CI images, the
+benchmark container) still need the suite to collect and run.  This module
+re-exports the real ``given``/``settings``/``st`` when available and otherwise
+provides a tiny deterministic stand-in: each ``@given`` test runs
+``max_examples`` seeded random examples drawn from the same strategy shapes
+(``integers``, ``sampled_from``, ``lists`` — the only ones the suite uses).
+
+Import as ``from _hypothesis_compat import given, settings, st``.
+"""
+
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import random
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example_from(self, rnd: random.Random):
+            return self._draw(rnd)
+
+    class _Strategies:
+        """The subset of hypothesis.strategies the test-suite uses."""
+
+        @staticmethod
+        def integers(min_value: int, max_value: int) -> _Strategy:
+            return _Strategy(lambda rnd: rnd.randint(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(seq) -> _Strategy:
+            items = list(seq)
+            return _Strategy(lambda rnd: rnd.choice(items))
+
+        @staticmethod
+        def lists(elements: _Strategy, min_size: int = 0,
+                  max_size: int = 16) -> _Strategy:
+            return _Strategy(lambda rnd: [
+                elements.example_from(rnd)
+                for _ in range(rnd.randint(min_size, max_size))
+            ])
+
+    st = _Strategies()
+
+    def settings(max_examples: int = 20, deadline=None, **_ignored):
+        def deco(fn):
+            fn._compat_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strategies):
+        def deco(fn):
+            def wrapper():
+                n = getattr(fn, "_compat_max_examples", 20)
+                rnd = random.Random(0xC0FFEE)
+                for _ in range(n):
+                    fn(*(s.example_from(rnd) for s in strategies))
+            # plain zero-arg signature on purpose: pytest must not try to
+            # resolve the drawn arguments as fixtures
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            return wrapper
+        return deco

@@ -1,0 +1,238 @@
+"""Backend layer: device engine == host engine (distribution + membership).
+
+Covers the acceptance criteria of the backend refactor: the jax backend's
+candidate sources, membership oracle, and fused Algorithm-1 rounds must be
+distributionally equivalent to the numpy reference on TPC-H-style union
+workloads (chains, high-overlap predicate unions, and a branching tree).
+"""
+
+import numpy as np
+import pytest
+from scipy import stats as sps
+
+from conftest import tiny_db
+
+from repro.core.backends import NumpyBackend, get_backend
+from repro.core.backends.base import Backend, CandidateSource, MembershipOracle
+from repro.core.backends.jax_backend import (DeviceJoinMembership,
+                                             DeviceTreeJoin, JaxBackend,
+                                             fp32_np)
+from repro.core.framework import estimate_union, warmup
+from repro.core.index import Catalog
+from repro.core.joins import JoinNode, JoinSpec, chain_join, full_join_matrix
+from repro.core.overlap import exact_union_size
+from repro.core.union_sampler import SetUnionSampler
+from repro.data.workloads import uq1, uq2, uq3
+
+
+def _tree_spec(seed=0):
+    """Branching (non-chain) acyclic join over the tiny DB."""
+    R, S, T = tiny_db(seed)
+    S = S.rename({"c": "cs"})
+    T = T.rename({"c": "ct", "d": "b"})     # T joins the root on b as well
+    return Catalog(), JoinSpec("tree", [
+        JoinNode("R", R, None, ()),
+        JoinNode("S", S, "R", ("b",)),
+        JoinNode("T", T, "R", ("b",)),
+    ])
+
+
+def _chi2_vs_expected(sample_matrix, expected_matrix):
+    """Chi-square of sampled tuple counts against the exact multiplicity law."""
+    def keyed(m):
+        return m.view([("", m.dtype)] * m.shape[1]).ravel()
+    uni, exp_counts = np.unique(keyed(expected_matrix), return_counts=True)
+    s_uni, s_counts = np.unique(keyed(sample_matrix), return_counts=True)
+    assert np.isin(s_uni, uni).all(), "sampled a tuple outside the join"
+    counts = np.zeros(uni.shape[0])
+    counts[np.searchsorted(uni, s_uni)] = s_counts
+    N = sample_matrix.shape[0]
+    exp = N * exp_counts / exp_counts.sum()
+    chi2 = float(((counts - exp) ** 2 / exp).sum())
+    return 1 - sps.chi2.cdf(chi2, df=uni.shape[0] - 1)
+
+
+def _chi2_uniform(sample_matrix, n_universe):
+    uni, counts = np.unique(
+        sample_matrix.view([("", sample_matrix.dtype)] * sample_matrix.shape[1]).ravel(),
+        return_counts=True)
+    N = sample_matrix.shape[0]
+    exp = N / n_universe
+    chi2 = float(((counts - exp) ** 2 / exp).sum()) + (n_universe - uni.shape[0]) * exp
+    return 1 - sps.chi2.cdf(chi2, df=n_universe - 1)
+
+
+# ---------------------------------------------------------------------------
+# protocols / factory
+# ---------------------------------------------------------------------------
+
+
+def test_backend_factory_and_protocols():
+    cat, spec = _tree_spec(0)
+    for name in ("numpy", "jax"):
+        be = get_backend(name, cat, [spec], seed=0)
+        assert isinstance(be, Backend)
+        assert isinstance(be.source(spec.name), CandidateSource)
+        assert isinstance(be.oracle(), MembershipOracle)
+    # passing an instance through is the identity
+    be = NumpyBackend(cat, [spec])
+    assert get_backend(be, cat, [spec]) is be
+    with pytest.raises(ValueError):
+        get_backend("torch", cat, [spec])
+
+
+# ---------------------------------------------------------------------------
+# candidate source: device tree draws match the exact multiplicity law
+# ---------------------------------------------------------------------------
+
+
+def test_jax_tree_source_distribution():
+    cat, spec = _tree_spec(1)
+    mat = full_join_matrix(cat, spec)
+    be = JaxBackend(cat, [spec], seed=2, device_batch=2048)
+    src = be.source(spec.name)
+    assert not src.is_empty()
+    rows, draws = src.draw(np.random.default_rng(0), 40_000)
+    assert draws >= 40_000
+    got = np.stack([rows[a] for a in spec.output_attrs], axis=1)
+    p = _chi2_vs_expected(got, mat)
+    assert p > 1e-3, f"device tree sampler distribution off (p={p})"
+
+
+def test_jax_tree_total_weight_matches_host():
+    from repro.core.join_sampler import JoinSampler
+    cat, spec = _tree_spec(2)
+    tree = DeviceTreeJoin(cat, spec)
+    host = JoinSampler(cat, spec, method="ew")
+    assert tree.total_weight == pytest.approx(host.exact_acyclic_size())
+
+
+def test_pallas_probe_path_matches_jnp():
+    """use_pallas routes range probes through the kernels; same draws."""
+    import jax
+    cat, spec = _tree_spec(3)
+    t_jnp = DeviceTreeJoin(cat, spec, use_pallas=False)
+    t_pal = DeviceTreeJoin(cat, spec, use_pallas=True)
+    key = jax.random.PRNGKey(0)
+    r1, ok1 = jax.jit(lambda k: t_jnp.draw(k, 256))(key)
+    r2, ok2 = jax.jit(lambda k: t_pal.draw(k, 256))(key)
+    assert np.array_equal(np.asarray(ok1), np.asarray(ok2))
+    for a in spec.output_attrs:
+        assert np.array_equal(np.asarray(r1[a]), np.asarray(r2[a])), a
+
+
+# ---------------------------------------------------------------------------
+# membership oracle: device == host, bit for bit
+# ---------------------------------------------------------------------------
+
+
+def test_membership_oracle_matches_host():
+    wl = uq3(scale=0.01, overlap=0.3, seed=0)
+    host = NumpyBackend(wl.cat, wl.joins).oracle()
+    dev = JaxBackend(wl.cat, wl.joins).oracle()
+    # probe a mix of real union tuples and perturbed non-members
+    wr = warmup(wl.cat, wl.joins, method="exact")
+    est = estimate_union(wr.oracle)
+    s = SetUnionSampler(wl.cat, wl.joins, est.cover, seed=3)
+    ss = s.sample(500)
+    rows = dict(ss.rows)
+    names = [j.name for j in wl.joins]
+    m_host = host.membership_matrix(rows, names)
+    m_dev = dev.membership_matrix(rows, names)
+    assert m_host.any(axis=1).all()          # union samples are members
+    assert np.array_equal(m_host, m_dev)
+    bad = {a: c + 1009 for a, c in rows.items()}
+    assert np.array_equal(host.membership_matrix(bad, names),
+                          dev.membership_matrix(bad, names))
+
+
+def test_device_membership_fp_duplicate_window():
+    """kmax duplicate handling: colliding fp1 values still verify via fp2."""
+    from repro.core.relation import Relation
+    rng = np.random.default_rng(0)
+    rel = Relation("R", {"a": rng.integers(0, 4, 500),
+                         "b": rng.integers(0, 4, 500)})
+    spec = chain_join("J", [rel], [])
+    dm = DeviceJoinMembership(spec)
+    attrs = tuple(sorted(rel.attrs))
+    fp1 = fp32_np([rel.columns[a] for a in attrs], salt=1)
+    # 500 rows over 16 value pairs: fp1 duplicates guaranteed
+    assert dm.rels[0][3] >= 2
+    import jax, jax.numpy as jnp
+    rows = {a: jnp.asarray(rel.columns[a].astype(np.int32)) for a in rel.attrs}
+    assert np.asarray(jax.jit(dm.contains)(rows)).all()
+
+
+# ---------------------------------------------------------------------------
+# fused Algorithm-1 rounds: jax == numpy distribution on union workloads
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("wl_fn,kw", [
+    (uq1, dict(scale=0.05, overlap=0.5, seed=1, n_joins=2)),   # chains
+    (uq2, dict(scale=0.02, seed=0)),                           # high overlap
+    (uq3, dict(scale=0.01, overlap=0.3, seed=0)),              # tree join
+], ids=["uq1-chains", "uq2-overlap", "uq3-tree"])
+def test_set_union_jax_uniform(wl_fn, kw):
+    wl = wl_fn(**kw)
+    wr = warmup(wl.cat, wl.joins, method="exact")
+    est = estimate_union(wr.oracle)
+    U = exact_union_size(wl.cat, wl.joins)
+    s = SetUnionSampler(wl.cat, wl.joins, est.cover, seed=7, backend="jax",
+                        round_batch=2048)
+    N = 120 * U
+    ss = s.sample(N)
+    assert len(ss) == N
+    p = _chi2_uniform(ss.matrix(), U)
+    assert p > 1e-3, f"device Algorithm-1 not uniform on {wl.name} (p={p})"
+
+
+def test_set_union_jax_matches_numpy_home_marginal():
+    wl = uq1(scale=0.05, overlap=0.5, seed=1, n_joins=2)
+    wr = warmup(wl.cat, wl.joins, method="exact")
+    est = estimate_union(wr.oracle)
+    a = SetUnionSampler(wl.cat, wl.joins, est.cover, seed=3).sample(8000)
+    b = SetUnionSampler(wl.cat, wl.joins, est.cover, seed=3, backend="jax",
+                        round_batch=1024).sample(8000)
+    fa = np.bincount(a.home, minlength=2) / len(a)
+    fb = np.bincount(b.home, minlength=2) / len(b)
+    assert np.abs(fa - fb).max() < 0.03
+
+
+# ---------------------------------------------------------------------------
+# validation / fallbacks
+# ---------------------------------------------------------------------------
+
+
+def test_jax_backend_rejects_unsupported_modes():
+    wl = uq3(scale=0.01, overlap=0.3, seed=0)
+    wr = warmup(wl.cat, wl.joins, method="exact")
+    est = estimate_union(wr.oracle)
+    with pytest.raises(ValueError, match="record"):
+        SetUnionSampler(wl.cat, wl.joins, est.cover, membership="record",
+                        backend="jax")
+    with pytest.raises(ValueError, match="strict_paper_loop"):
+        SetUnionSampler(wl.cat, wl.joins, est.cover, strict_paper_loop=True,
+                        backend="jax")
+    from repro.core.predicates import Pred, RejectingPredicate
+    with pytest.raises(ValueError, match="predicate"):
+        SetUnionSampler(wl.cat, wl.joins, est.cover, backend="jax",
+                        predicate=RejectingPredicate([Pred("odate", "<=", 1)]))
+    with pytest.raises(ValueError, match="ew"):
+        JaxBackend(wl.cat, wl.joins, join_method="eo")
+
+
+def test_jax_backend_rejects_cyclic():
+    from repro.data.workloads import uq4
+    wl = uq4(scale=0.02, seed=0)
+    with pytest.raises(ValueError, match="cyclic"):
+        JaxBackend(wl.cat, wl.joins)
+
+
+def test_online_union_jax_backend_smoke():
+    from repro.core.online import OnlineUnionSampler
+    wl = uq3(scale=0.01, overlap=0.3, seed=0)
+    ou = OnlineUnionSampler(wl.cat, wl.joins, seed=5, phi=512, rw_batch=128,
+                            backend="jax")
+    ss = ou.sample(200)
+    assert len(ss) == 200

@@ -2,7 +2,7 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 from scipy import stats as sps
 
 from repro.core.cover import build_cover
@@ -216,3 +216,62 @@ def test_rejection_mode_predicate(wl3):
     assert (ss.rows["odate"] <= 1500).all()
     p = _chi2_uniform(ss.matrix(), U_f)
     assert p > 1e-3, f"rejection-mode predicate sampling not uniform: p={p}"
+
+
+# ---------------------------------------------------------------------------
+# Record-mode revision path (Alg 1 lines 10-12) + membership matrix
+# ---------------------------------------------------------------------------
+
+
+def test_record_mode_revision_path():
+    """A tuple recorded at a later join moves home (and drops stale copies)
+    when re-sampled from an earlier join."""
+    from repro.core.cover import Cover
+    from repro.core.relation import Relation
+    rng = np.random.default_rng(0)
+    R = Relation("Rbase", {"a": np.arange(12), "v": rng.integers(0, 5, 12)})
+    # two identical single-relation joins: J1's true cover piece is empty,
+    # but the lazy record only discovers that through revisions
+    j0 = chain_join("J0", [R], [])
+    j1 = chain_join("J1", [R], [])
+    cat = Catalog()
+    cover = Cover(order=["J0", "J1"],
+                  piece_sizes={"J0": 12.0, "J1": 12.0},
+                  join_sizes={"J0": 12.0, "J1": 12.0})
+    s = SetUnionSampler(cat, [j0, j1], cover, membership="record", seed=5)
+    ss = s.sample(150)
+    assert ss.stats.revisions > 0, "revision path never exercised"
+    assert ss.stats.backtrack_removed > 0, "stale copies never removed"
+    assert ss.stats.cover_rejects > 0    # re-draws at J1 after revision reject
+    # after revision a tuple has exactly one home join in the output
+    keys = ss.matrix()
+    uniq = {}
+    for i, t in enumerate(map(tuple, keys.tolist())):
+        uniq.setdefault(t, set()).add(int(ss.home[i]))
+    assert all(len(h) == 1 for h in uniq.values()), \
+        "a tuple kept copies credited to two different joins"
+
+
+def test_membership_prober_matrix(wl3):
+    from repro.core.joins import full_join_matrix
+    from repro.core.membership import MembershipProber
+    cat, joins = wl3.cat, wl3.joins
+    prober = MembershipProber(cat, joins)
+    attrs = list(joins[0].output_attrs)
+    truth = {j.name: set(map(tuple, full_join_matrix(cat, j, attrs=attrs).tolist()))
+             for j in joins}
+    # probe every tuple of join 0 plus perturbed non-members
+    mat0 = full_join_matrix(cat, joins[0], attrs=attrs)
+    fakes = mat0 + 5003
+    probe = np.concatenate([mat0, fakes])
+    rows = {a: probe[:, i] for i, a in enumerate(attrs)}
+    names = [j.name for j in joins]
+    m = prober.membership_matrix(rows, names)
+    assert m.shape == (probe.shape[0], len(joins))
+    expected = np.zeros_like(m)
+    for k, name in enumerate(names):
+        expected[:, k] = [tuple(t) in truth[name] for t in probe.tolist()]
+    assert np.array_equal(m, expected)
+    # column order follows join_names; default order covers all joins
+    m_default = prober.membership_matrix(rows)
+    assert np.array_equal(m_default, m)
