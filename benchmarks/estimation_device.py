@@ -1,0 +1,81 @@
+"""Device estimation: jitted walk+probe+HT batches vs the host loop.
+
+Times one ONLINE-UNION refinement observation (a wander-join walk batch on
+the pivot join, membership probes against the other join of Δ, and both HT
+accumulator updates) on the 2-join TPC-H union workload (UQ1, n_joins=2):
+
+* ``host`` — :class:`~repro.core.estimators.numpy_estimator.NumpyEstimator`
+  at the ONLINE-UNION production default batch (``rw_batch=256``) and at the
+  device's batch, per-walk cost in µs,
+* ``device`` — :class:`~repro.core.estimators.jax_estimator.JaxEstimator`'s
+  fused jitted program at its design-point batch.
+
+The headline row compares each engine at its production configuration: the
+host loop cannot profitably grow its batch (the per-element Welford update
+and the per-round Python dispatch scale linearly), while the device engine
+exists precisely to fuse large batches into one program.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.estimators import NumpyEstimator
+from repro.core.estimators.jax_estimator import JaxEstimator, DeviceRunning
+
+from .common import emit
+
+
+def _host_us_per_walk(wl, batch: int, rounds: int) -> float:
+    h = NumpyEstimator(wl.cat, wl.joins, seed=0, batch=batch)
+    h.observe(wl.joins, rounds=1)                      # warm caches
+    t0 = time.perf_counter()
+    h.observe(wl.joins, rounds=rounds)
+    return (time.perf_counter() - t0) / (rounds * batch) * 1e6
+
+
+def _device_us_per_walk(wl, batch: int, rounds: int) -> float:
+    import jax
+    d = JaxEstimator(wl.cat, wl.joins, seed=0, batch=batch)
+    pivot = d._pivot(wl.joins)
+    others = tuple(sorted(j.name for j in wl.joins if j.name != pivot.name))
+    fn = d._observe_fn(pivot.name, others)
+    ss, st = DeviceRunning(), DeviceRunning()
+    key = jax.random.PRNGKey(0)
+    jax.block_until_ready(fn(key, ss.state, st.state))  # compile
+    ts = []
+    for _ in range(rounds):
+        key, sub = jax.random.split(key)
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(sub, ss.state, st.state))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)) / batch * 1e6
+
+
+def main(small: bool = True) -> None:
+    from repro.data.workloads import uq1
+    scale = 0.02 if small else 0.05
+    host_batch = 256                     # OnlineUnionSampler rw_batch default
+    dev_batch = 2048 if small else 16384
+    rounds = 4 if small else 10
+    wl = uq1(scale=scale, overlap=0.3, seed=0, n_joins=2)
+
+    t_host = _host_us_per_walk(wl, host_batch, rounds)
+    t_host_big = _host_us_per_walk(wl, dev_batch, max(rounds // 2, 2))
+    t_dev = _device_us_per_walk(wl, dev_batch, rounds)
+
+    emit("est_dev_host_loop", t_host,
+         f"us_per_walk@batch={host_batch}")
+    emit("est_dev_host_bigbatch", t_host_big,
+         f"us_per_walk@batch={dev_batch}")
+    emit("est_dev_device_fused", t_dev,
+         f"us_per_walk@batch={dev_batch}")
+    emit("est_dev_speedup", t_host / max(t_dev, 1e-9),
+         f"device_vs_host_loop={t_host / max(t_dev, 1e-9):.1f}x "
+         f"equal_batch={t_host_big / max(t_dev, 1e-9):.1f}x")
+
+
+if __name__ == "__main__":
+    main(small=False)

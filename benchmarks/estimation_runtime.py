@@ -1,7 +1,18 @@
-"""Fig 4c/4d: union-size estimation runtime — HISTOGRAM-BASED vs FULLJOIN."""
+"""Fig 4c/4d: union-size estimation runtime — HISTOGRAM-BASED vs FULLJOIN.
+
+The device-estimation comparison (host refinement loop vs the jitted
+walk+probe+HT batch of the estimator subsystem) rides along via
+:mod:`benchmarks.estimation_device`, which excludes one-time jit
+compilation like the other device benchmarks.
+
+CLI: ``python -m benchmarks.estimation_runtime [--smoke]`` — ``--smoke`` is
+the CI job: the quick functional pass over both engines; the default is the
+paper-scale run.
+"""
 
 from __future__ import annotations
 
+import argparse
 import time
 
 from repro.core.framework import estimate_union, warmup
@@ -40,4 +51,12 @@ def main(small: bool = True) -> None:
 
 
 if __name__ == "__main__":
-    main(small=False)
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="quick functional pass (CI job)")
+    args = ap.parse_args()
+    from .common import header
+    from . import estimation_device
+    header()
+    main(small=args.smoke)
+    estimation_device.main(small=args.smoke)

@@ -12,13 +12,14 @@ import time
 import traceback
 
 from . import (bias_ablation, breakdown, data_scale, device_sampler,
-               estimation_error, estimation_runtime, kernels_bench, reuse,
-               roofline, sampling_scaling, union_engine)
+               estimation_device, estimation_error, estimation_runtime,
+               kernels_bench, reuse, roofline, sampling_scaling, union_engine)
 from .common import emit, header
 
 MODULES = [
     ("estimation_error", estimation_error),     # Fig 4a/4b + 5a
     ("estimation_runtime", estimation_runtime), # Fig 4c/4d
+    ("estimation_device", estimation_device),   # device walk+probe batches
     ("sampling_scaling", sampling_scaling),     # Fig 5c/5d/5e
     ("breakdown", breakdown),                   # Fig 5f/5g/5h
     ("data_scale", data_scale),                 # Fig 5b

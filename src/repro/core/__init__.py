@@ -3,6 +3,8 @@
 from .backends import (Backend, CandidateSource, MembershipOracle,
                        NumpyBackend, get_backend)
 from .cover import Cover, build_cover, largest_first_order
+from .estimators import (EstimatorBackend, NumpyEstimator, OverlapEstimate,
+                         ReservoirPool, get_estimator)
 from .distributed import DistributedUnionSampler, merge_statistics, merge_streams
 from .framework import (UnionEstimates, WarmupResult, estimate_union,
                         make_set_union_sampler, warmup)
@@ -25,8 +27,9 @@ from .union_sampler import (BernoulliUnionSampler, DisjointUnionSampler,
 
 __all__ = [
     "Backend", "BernoulliUnionSampler", "CandidateSource", "Catalog",
-    "Cover", "DisjointUnionSampler", "MembershipOracle", "NumpyBackend",
-    "get_backend",
+    "Cover", "DisjointUnionSampler", "EstimatorBackend", "MembershipOracle",
+    "NumpyBackend", "NumpyEstimator", "OverlapEstimate", "ReservoirPool",
+    "get_backend", "get_estimator",
     "DistributedUnionSampler", "HistogramOverlap", "JaxChainSampler", "JoinNode", "JoinSampler",
     "JoinSpec", "KOverlaps", "MembershipProber", "OnlineUnionSampler",
     "OverlapOracle", "Pred", "RandomWalkOverlap", "RejectingPredicate",

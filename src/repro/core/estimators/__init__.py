@@ -1,0 +1,44 @@
+"""Estimation backends for §5–§7 size/overlap estimation.
+
+``get_estimator("numpy" | "jax" | <EstimatorBackend instance>, ...)`` is the
+single entry point the ONLINE-UNION sampler and the warm-up facade use; see
+:mod:`repro.core.estimators.base` for the :class:`EstimatorBackend` contract
+and DESIGN.md ("Estimation subsystem") for the architecture.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence, Union
+
+from ..index import Catalog
+from ..joins import JoinSpec
+from .base import (EstimatorBackend, OverlapEstimate, PoolBatch,
+                   ReservoirPool, StatView)
+from .numpy_estimator import NumpyEstimator
+
+__all__ = [
+    "EstimatorBackend", "JaxEstimator", "NumpyEstimator", "OverlapEstimate",
+    "PoolBatch", "ReservoirPool", "StatView", "get_estimator",
+]
+
+
+def get_estimator(spec: Union[str, EstimatorBackend], cat: Catalog,
+                  joins: Sequence[JoinSpec], seed: int = 0, batch: int = 512,
+                  **kwargs) -> EstimatorBackend:
+    """Resolve an estimator selector (``"numpy"``, ``"jax"``, or an instance)."""
+    if isinstance(spec, EstimatorBackend) and not isinstance(spec, str):
+        return spec
+    if spec == "numpy":
+        return NumpyEstimator(cat, joins, seed=seed, batch=batch, **kwargs)
+    if spec == "jax":
+        from .jax_estimator import JaxEstimator  # keep base import light
+        return JaxEstimator(cat, joins, seed=seed, batch=batch, **kwargs)
+    raise ValueError(
+        f"unknown estimator backend {spec!r} (expected 'numpy' or 'jax')")
+
+
+def __getattr__(name: str):
+    if name == "JaxEstimator":                   # lazy: importing jax is heavy
+        from .jax_estimator import JaxEstimator
+        return JaxEstimator
+    raise AttributeError(name)

@@ -17,11 +17,12 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from .cover import Cover, build_cover
+from .estimators import get_estimator
 from .index import Catalog
 from .joins import JoinSpec, join_size
 from .join_sampler import JoinSampler
 from .koverlap import KOverlaps, OverlapOracle, k_overlaps
-from .overlap import (HistogramOverlap, RandomWalkOverlap, exact_join_size_distinct,
+from .overlap import (HistogramOverlap, exact_join_size_distinct,
                       exact_overlap)
 from .size_estimation import olken_bound
 from .union_sampler import SampleSet, SetUnionSampler
@@ -32,7 +33,7 @@ class WarmupResult:
     oracle: OverlapOracle
     method: str
     seconds: float
-    aux: object = None  # HistogramOverlap / RandomWalkOverlap instance
+    aux: object = None  # HistogramOverlap / EstimatorBackend instance
 
 
 def _exact_size_fn(cat: Catalog):
@@ -49,7 +50,12 @@ def warmup(cat: Catalog, joins: Sequence[JoinSpec], method: str = "exact",
            seed: int = 0, rw_batch: int = 512,
            rw_rel_halfwidth: float = 0.25,
            rw_max_walks: int = 20_000,
-           hist_mode: str = "max") -> WarmupResult:
+           hist_mode: str = "max",
+           backend: str = "numpy") -> WarmupResult:
+    """Build the parameter oracle.  ``backend`` selects the estimation engine
+    for the ``histogram`` / ``random_walk`` methods: ``"numpy"`` is the host
+    reference, ``"jax"`` runs walks, probes, HT accumulation, and the
+    histogram algebra on device (see repro.core.estimators)."""
     joins = list(joins)
     t0 = time.perf_counter()
     if method == "exact":
@@ -57,11 +63,21 @@ def warmup(cat: Catalog, joins: Sequence[JoinSpec], method: str = "exact",
                                _exact_size_fn(cat), joins)
         aux = None
     elif method == "histogram":
-        hist = HistogramOverlap(cat, joins, mode=hist_mode)
+        if backend == "numpy":
+            hist = HistogramOverlap(cat, joins, mode=hist_mode)
+        elif backend == "jax":
+            # no walkers needed for the histogram method — build the device
+            # histogram directly rather than a full estimator
+            from .estimators.jax_estimator import DeviceHistogramOverlap
+            hist = DeviceHistogramOverlap(cat, joins, mode=hist_mode)
+        else:
+            raise ValueError(
+                f"unknown estimation backend {backend!r} "
+                "(expected 'numpy' or 'jax')")
         oracle = OverlapOracle(hist.estimate, lambda j: olken_bound(cat, j), joins)
         aux = hist
     elif method == "random_walk":
-        rw = RandomWalkOverlap(cat, joins, seed=seed, batch=rw_batch)
+        rw = get_estimator(backend, cat, joins, seed=seed, batch=rw_batch)
         oracle = OverlapOracle(
             lambda d: rw.estimate(d, rel_halfwidth=rw_rel_halfwidth,
                                   max_walks=rw_max_walks).value,

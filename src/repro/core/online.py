@@ -17,6 +17,13 @@ overlap / union estimates on the fly with RANDOM-WALK batches while sampling.
   ``(|J'_h|'/|U|') / (|J'_h|/|U|)`` (normalised by its maximum so retention is
   maximal) — the retained output is uniform under the refined parameters.
   Backtracking stops once the estimate confidence reaches ``γ``.
+
+Warm-up, φ-batch refinement, and the reuse pool are served by an
+:class:`~repro.core.estimators.base.EstimatorBackend`: ``backend="numpy"``
+keeps the behaviour-identical host engine; ``backend="jax"`` runs histogram
+initialisation, whole wander-join walk batches, membership probes, and the
+Horvitz–Thompson accumulators on device (sharing the sampling backend's
+membership indexes).  Unknown backend selectors raise.
 """
 
 from __future__ import annotations
@@ -28,13 +35,14 @@ import numpy as np
 
 from .backends import Backend, get_backend
 from .cover import Cover, build_cover
-from .framework import estimate_union, warmup
+from .estimators import EstimatorBackend, get_estimator
+from .framework import estimate_union
 from .index import Catalog
 from .joins import JoinSpec
 from .koverlap import OverlapOracle
 from .membership import rows_subset
-from .overlap import RandomWalkOverlap
 from .relation import fingerprint128
+from .size_estimation import olken_bound
 from .union_sampler import SampleSet, SamplerStats
 
 Rows = Dict[str, np.ndarray]
@@ -56,10 +64,13 @@ class OnlineUnionSampler:
                  join_method: str = "ew", rw_batch: int = 256,
                  order: Optional[Sequence[str]] = None,
                  warm_rounds: int = 2,
-                 backend: str | Backend = "numpy"):
+                 backend: str | Backend = "numpy",
+                 estimator: Optional[str | EstimatorBackend] = None,
+                 pool_cap: int = 512):
         self.cat = cat
         self.joins = list(joins)
         self.names = [j.name for j in self.joins]
+        # get_backend raises on unknown backend strings (no silent fallback)
         self.backend = get_backend(backend, cat, self.joins, join_method=join_method,
                                    seed=seed)
         self.prober = self.backend.oracle()
@@ -70,17 +81,45 @@ class OnlineUnionSampler:
         self.target_rel_halfwidth = target_rel_halfwidth
         self.stats = SamplerStats()
 
-        # (1) cheap init: HISTOGRAM-BASED parameters
-        wr = warmup(cat, self.joins, method="histogram")
-        est = estimate_union(wr.oracle, order)
+        # (2 — built first so (1) can consume its histogram oracle)
+        # estimation subsystem: warm-up, φ-batch refinement, and the reuse
+        # pool all come from the estimator backend, which follows the
+        # sampling backend unless overridden (backend="jax" ⇒ device walks,
+        # device membership probes, device HT accumulators).
+        if estimator is not None:
+            est_spec = estimator            # explicit; unknown strings raise
+        elif isinstance(backend, str):
+            est_spec = backend              # follow the sampling backend
+        else:
+            est_spec = getattr(backend, "name", "numpy")
+            if est_spec not in ("numpy", "jax"):
+                import warnings
+                warnings.warn(
+                    f"OnlineUnionSampler: no estimator backend for custom "
+                    f"sampling backend {est_spec!r}; refinement walks fall "
+                    "back to the host engine (pass estimator= to override)",
+                    stacklevel=2)
+                est_spec = "numpy"
+        est_kwargs = {}
+        if est_spec == "jax":
+            members = getattr(self.backend, "members", None)
+            if members is not None:   # share the device membership indexes
+                est_kwargs["members"] = members
+        self.estimator = get_estimator(est_spec, cat, self.joins,
+                                       seed=seed + 1, batch=rw_batch,
+                                       pool_cap=pool_cap, **est_kwargs)
+
+        # (1) cheap init: HISTOGRAM-BASED parameters (device ops under jax)
+        hist = self.estimator.histogram()
+        oracle = OverlapOracle(hist.estimate,
+                               lambda j: olken_bound(cat, j), self.joins)
+        est = estimate_union(oracle, order)
         self.cover: Cover = est.cover
         self.order = list(self.cover.order)
 
-        # (2) random-walk refinement machinery (+ its pool feeds reuse)
-        self.rw = RandomWalkOverlap(cat, self.joins, seed=seed + 1, batch=rw_batch)
         for j in self.joins:            # tiny warm start so sizes exist
             for _ in range(warm_rounds):
-                self.rw.observe([j], rounds=1)
+                self.estimator.observe([j], rounds=1)
         self._refresh_pools()
 
         self.sources = {j.name: self.backend.source(j.name)
@@ -89,11 +128,16 @@ class OnlineUnionSampler:
         self._since_refresh = 0
         self._confident = False
 
+    @property
+    def rw(self) -> EstimatorBackend:
+        """Historical name of the refinement engine (now an estimator backend)."""
+        return self.estimator
+
     # ------------------------------------------------------------------ pools
     def _refresh_pools(self) -> None:
-        """Flatten rw.walk_pool batches into per-join candidate lists."""
+        """Flatten drained walk-pool batches into per-join candidate lists."""
         self.pools: Dict[str, List[Tuple[Dict[str, int], float]]] = {}
-        for name, batches in self.rw.walk_pool.items():
+        for name, batches in self.estimator.drain_pool().items():
             entries: List[Tuple[Dict[str, int], float]] = []
             for rows, prob in batches:
                 ok = prob > 0
@@ -102,7 +146,6 @@ class OnlineUnionSampler:
                     entries.append(({a: int(rows[a][i]) for a in self.attrs},
                                     float(prob[i])))
             self.pools[name] = entries
-        self.rw.walk_pool = {}
 
     # ------------------------------------------------------------- parameters
     def _sel_ratio(self, oidx: int) -> float:
@@ -115,7 +158,7 @@ class OnlineUnionSampler:
         return p / s if s > 0 else np.full(len(p), 1.0 / len(p))
 
     def _join_size_est(self, name: str) -> float:
-        st = self.rw._size_stats.get(name)
+        st = self.estimator.size_stats.get(name)
         if st is not None and st.count > 0 and st.mean > 0:
             return st.mean
         return max(self.cover.join_sizes[name], 1.0)
@@ -126,13 +169,14 @@ class OnlineUnionSampler:
         # add fresh walk rounds for every pair (budgeted)
         import itertools
         for a, b in itertools.combinations(self.joins, 2):
-            self.rw.observe([a, b], rounds=1)
+            self.estimator.observe([a, b], rounds=1)
         if len(self.joins) > 2:
-            self.rw.observe(self.joins, rounds=1)
+            self.estimator.observe(self.joins, rounds=1)
         self._refresh_pools()
+        ostats = self.estimator.overlap_stats
         oracle = OverlapOracle(
-            lambda d: self.rw._stats[frozenset(j.name for j in d)].mean
-            if frozenset(j.name for j in d) in self.rw._stats else 0.0,
+            lambda d: ostats[frozenset(j.name for j in d)].mean
+            if frozenset(j.name for j in d) in ostats else 0.0,
             lambda j: self._join_size_est(j.name), self.joins)
         self.cover = build_cover(oracle, self.order)
         # ---- backtracking ----
@@ -155,7 +199,7 @@ class OnlineUnionSampler:
         self._accepted = kept
         # confidence check (γ): all pairwise overlap CIs tight enough?
         hw_ok = True
-        for key, st in self.rw._stats.items():
+        for key, st in self.estimator.overlap_stats.items():
             if len(key) < 2 or st.count < 8:
                 continue
             if st.mean > 0 and st.half_width(self.gamma) > self.target_rel_halfwidth * st.mean:

@@ -16,17 +16,20 @@ Three instantiations, mirroring the paper:
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Dict, FrozenSet, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .estimators.base import OverlapEstimate
+from .estimators.numpy_estimator import NumpyEstimator
 from .index import Catalog
 from .joins import JoinSpec, full_join_matrix
-from .join_sampler import JoinSampler
-from .membership import MembershipProber
-from .size_estimation import RunningMean, z_value
 from .splitting import SplitPlan, split_plans
+
+__all__ = [
+    "HistogramOverlap", "OverlapEstimate", "RandomWalkOverlap",
+    "exact_join_size_distinct", "exact_overlap", "exact_union_size",
+]
 
 
 # ---------------------------------------------------------------------------
@@ -188,89 +191,13 @@ class HistogramOverlap:
 # ---------------------------------------------------------------------------
 # RANDOM-WALK (Eq. 2 + Eq. 3)
 # ---------------------------------------------------------------------------
+#
+# The implementation lives in the estimator subsystem now
+# (repro/core/estimators/): NumpyEstimator is the behaviour-identical host
+# reference (same class body, same random stream), JaxEstimator runs the
+# whole walk+probe+HT pipeline on device.  RandomWalkOverlap stays as the
+# historical name of the host engine.
 
 
-@dataclasses.dataclass
-class OverlapEstimate:
-    value: float
-    half_width: float
-    walks: int
-
-
-class RandomWalkOverlap:
+class RandomWalkOverlap(NumpyEstimator):
     """Unbiased overlap estimation from wander-join walks + membership probes."""
-
-    def __init__(self, cat: Catalog, joins: Sequence[JoinSpec], seed: int = 0,
-                 batch: int = 512):
-        self.cat = cat
-        self.joins = list(joins)
-        self.by_name = {j.name: j for j in self.joins}
-        self.prober = MembershipProber(cat, self.joins)
-        self.batch = batch
-        self._samplers: Dict[str, JoinSampler] = {}
-        self._rng = np.random.default_rng(seed)
-        # per-Δ running statistics: HT mean of indicator/p (=|O|) and of 1/p (=|J|)
-        self._stats: Dict[FrozenSet[str], RunningMean] = {}
-        self._size_stats: Dict[str, RunningMean] = {}
-        # reuse pool: walk tuples + probabilities per join (feeds ONLINE-UNION §7)
-        self.walk_pool: Dict[str, List[Tuple[Dict[str, np.ndarray], np.ndarray]]] = {}
-
-    def sampler(self, name: str) -> JoinSampler:
-        if name not in self._samplers:
-            self._samplers[name] = JoinSampler(self.cat, self.by_name[name], method="wj")
-        return self._samplers[name]
-
-    def _pivot(self, delta: Sequence[JoinSpec]) -> JoinSpec:
-        # pivot = join with the smallest Olken bound (lowest-variance walks)
-        from .size_estimation import olken_bound
-        return min(delta, key=lambda j: olken_bound(self.cat, j))
-
-    def observe(self, delta: Sequence[JoinSpec], rounds: int = 1) -> OverlapEstimate:
-        """Run ``rounds`` batches of walks on the pivot and update estimates."""
-        delta = list(delta)
-        key = frozenset(j.name for j in delta)
-        stat = self._stats.setdefault(key, RunningMean())
-        pivot = self._pivot(delta)
-        others = [j for j in delta if j.name != pivot.name]
-        smp = self.sampler(pivot.name)
-        for _ in range(rounds):
-            sb = smp.sample_batch(self._rng, self.batch)
-            inv = np.where(sb.ok & (sb.prob > 0), 1.0 / np.maximum(sb.prob, 1e-300), 0.0)
-            self._size_stats.setdefault(pivot.name, RunningMean()).update_batch(inv)
-            ind = sb.ok.copy()
-            if others and ind.any():
-                member = np.ones(self.batch, dtype=bool)
-                for j in others:
-                    member &= self.prober.contains(j.name, sb.rows)
-                ind &= member
-            stat.update_batch(np.where(ind, inv, 0.0))
-            self.walk_pool.setdefault(pivot.name, []).append((sb.rows, sb.prob))
-        return OverlapEstimate(stat.mean, stat.half_width(0.90), stat.count)
-
-    def estimate(self, delta: Sequence[JoinSpec], confidence: float = 0.90,
-                 rel_halfwidth: float = 0.25, max_walks: int = 50_000,
-                 min_walks: int = 512) -> OverlapEstimate:
-        """Walk until the CI is tight (or budget exhausted); Eq. 2 estimate."""
-        delta = list(delta)
-        key = frozenset(j.name for j in delta)
-        while True:
-            est = self.observe(delta, rounds=1)
-            stat = self._stats[key]
-            if stat.count >= min_walks:
-                hw = stat.half_width(confidence)
-                if est.value <= 0 and stat.count >= min_walks * 4:
-                    break  # looks empty
-                if est.value > 0 and hw <= rel_halfwidth * est.value:
-                    break
-            if stat.count >= max_walks:
-                break
-        stat = self._stats[key]
-        return OverlapEstimate(max(stat.mean, 0.0), stat.half_width(confidence), stat.count)
-
-    def join_size(self, join: JoinSpec, min_walks: int = 512) -> float:
-        """HT size of one join (walked as a Δ of size 1)."""
-        st = self._size_stats.get(join.name)
-        while st is None or st.count < min_walks:
-            self.observe([join], rounds=1)
-            st = self._size_stats[join.name]
-        return max(st.mean, 0.0)

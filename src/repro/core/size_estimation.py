@@ -92,19 +92,39 @@ class RunningMean:
 
 
 class WanderJoinSizeEstimator:
-    """HT estimate of |J| from batched wander-join walks, with CI stopping."""
+    """HT estimate of |J| from batched wander-join walks, with CI stopping.
+
+    ``backend="numpy"`` (default) walks on host; ``backend="jax"`` runs the
+    walk batches and HT accumulation as one jitted device program via the
+    estimator subsystem (:mod:`repro.core.estimators`).
+    """
 
     def __init__(self, cat: Catalog, spec: JoinSpec, seed: int = 0,
-                 batch: int = 512):
+                 batch: int = 512, backend: str = "numpy"):
         self.spec = spec
-        self.sampler = JoinSampler(cat, spec, method="wj")
-        self.rng = np.random.default_rng(seed)
         self.batch = batch
-        self.stat = RunningMean()
         self.walks = 0
+        self._est = None
+        if backend == "numpy":
+            self.sampler = JoinSampler(cat, spec, method="wj")
+            self.rng = np.random.default_rng(seed)
+            self.stat = RunningMean()
+        elif backend == "jax":
+            from .estimators.jax_estimator import JaxEstimator
+            self._est = JaxEstimator(cat, [spec], seed=seed, batch=batch)
+            self._est.observe([spec], rounds=0)   # materialise the accumulator
+            self.stat = self._est.size_stats[spec.name]
+        else:
+            raise ValueError(
+                f"unknown backend {backend!r} (expected 'numpy' or 'jax')")
 
     def step(self) -> Tuple[float, float]:
         """One batch of walks; returns (estimate, half_width@90%)."""
+        if self._est is not None:
+            self._est.observe([self.spec], rounds=1)
+            self.stat = self._est.size_stats[self.spec.name]
+            self.walks += self.batch
+            return self.stat.mean, self.stat.half_width(0.90)
         sb = self.sampler.sample_batch(self.rng, self.batch)
         inv = np.where(sb.ok & (sb.prob > 0), 1.0 / np.maximum(sb.prob, 1e-300), 0.0)
         self.stat.update_batch(inv)

@@ -1,0 +1,338 @@
+"""Estimation subsystem: device estimator == host reference.
+
+Covers the acceptance criteria of the estimator refactor:
+
+* host-vs-device equivalence of the HT size/overlap statistics — exact walk
+  counts and tight numerical agreement on shared walk traces (the device
+  accumulators are float32; the host reference is float64),
+* device walk probabilities exactly reproduce the wander-join law
+  ``p(t) = 1/|R_root| · Π 1/d_i`` recomputed from host indexes,
+* CI coverage: the 90% half-widths bracket the exact join/overlap/union
+  sizes on small TPC-H-style workloads,
+* the reservoir-capped walk pool (bounded memory, estimates untouched),
+* ONLINE-UNION backend routing (``"jax"`` → device estimator, unknown
+  selectors raise), and
+* the device histogram-overlap algebra matching the host §5 bounds.
+"""
+
+import numpy as np
+import pytest
+
+from conftest import tiny_db
+
+from repro.core.estimators import (EstimatorBackend, NumpyEstimator,
+                                   ReservoirPool, get_estimator)
+from repro.core.estimators.jax_estimator import (DeviceHistogramOverlap,
+                                                 DeviceRunning,
+                                                 DeviceWalkJoin, JaxEstimator,
+                                                 _batch_moments,
+                                                 _merge_moments)
+from repro.core.index import Catalog
+from repro.core.joins import chain_join, full_join_matrix
+from repro.core.overlap import (HistogramOverlap, RandomWalkOverlap,
+                                exact_overlap, exact_union_size)
+from repro.core.relation import combine_columns
+from repro.core.size_estimation import RunningMean, WanderJoinSizeEstimator
+from repro.data.tpch import make_variants
+
+
+def _two_chains(seed=0, overlap=0.5):
+    """Two chain joins over variant relations with controlled overlap."""
+    R, S, T = tiny_db(seed, n_r=80, n_s=90, n_t=70)
+    cat = Catalog()
+    Rv = make_variants(R, 2, overlap, seed=seed + 10)
+    Sv = make_variants(S, 2, overlap, seed=seed + 11)
+    Tv = make_variants(T, 2, overlap, seed=seed + 12)
+    j0 = chain_join("J0", [Rv[0], Sv[0], Tv[0]], ["b", "c"])
+    j1 = chain_join("J1", [Rv[1], Sv[1], Tv[1]], ["b", "c"])
+    return cat, [j0, j1]
+
+
+# ---------------------------------------------------------------------------
+# factory / protocol
+# ---------------------------------------------------------------------------
+
+
+def test_estimator_factory_and_protocol():
+    cat, joins = _two_chains(0)
+    for name in ("numpy", "jax"):
+        est = get_estimator(name, cat, joins, seed=0, batch=64)
+        assert isinstance(est, EstimatorBackend)
+        assert est.name == name
+    inst = NumpyEstimator(cat, joins)
+    assert get_estimator(inst, cat, joins) is inst
+    with pytest.raises(ValueError, match="unknown estimator"):
+        get_estimator("torch", cat, joins)
+    # the historical host class is the numpy estimator
+    assert issubclass(RandomWalkOverlap, NumpyEstimator)
+
+
+# ---------------------------------------------------------------------------
+# device walks: exact wander-join probabilities
+# ---------------------------------------------------------------------------
+
+
+def test_device_walk_probabilities_match_host_law():
+    import jax
+    from repro.core.join_sampler import JoinSampler
+    cat, joins = _two_chains(1)
+    spec = joins[0]
+    w = DeviceWalkJoin(cat, spec)
+    rows, prob, ok = jax.jit(lambda k: w.draw(k, 1024))(jax.random.PRNGKey(7))
+    rows = {a: np.asarray(v, np.int64) for a, v in rows.items()}
+    prob, ok = np.asarray(prob), np.asarray(ok)
+    assert ok.any()
+    js = JoinSampler(cat, spec, method="wj")
+    expect = np.full(1024, 1.0 / js.n_root)
+    alive = np.ones(1024, bool)
+    for n in js.order[1:]:
+        idx = cat.index(js._reduced[n.alias], list(n.edge_attrs))
+        d = idx.degrees(combine_columns([rows[a] for a in n.edge_attrs]))
+        alive &= d > 0
+        expect = np.where(alive, expect / np.maximum(d, 1), 0.0)
+    assert np.array_equal(ok, alive)
+    assert np.allclose(prob[ok], expect[ok], rtol=1e-5)
+
+
+def test_device_walk_pallas_path_matches_jnp():
+    """use_pallas routes hops through the fused kernel; identical draws."""
+    import jax
+    R, S, T = tiny_db(3)
+    cat = Catalog()
+    spec = chain_join("RST", [R, S, T], ["b", "c"])
+    w1 = DeviceWalkJoin(cat, spec, use_pallas=False)
+    w2 = DeviceWalkJoin(cat, spec, use_pallas=True)
+    key = jax.random.PRNGKey(0)
+    r1, p1, o1 = jax.jit(lambda k: w1.draw(k, 256))(key)
+    r2, p2, o2 = jax.jit(lambda k: w2.draw(k, 256))(key)
+    assert np.array_equal(np.asarray(o1), np.asarray(o2))
+    assert np.array_equal(np.asarray(p1), np.asarray(p2))
+    for a in spec.output_attrs:
+        assert np.array_equal(np.asarray(r1[a]), np.asarray(r2[a])), a
+
+
+# ---------------------------------------------------------------------------
+# shared-trace equivalence: device accumulators == host RunningMean
+# ---------------------------------------------------------------------------
+
+
+def test_device_accumulator_matches_host_on_shared_trace():
+    import jax.numpy as jnp
+    rng = np.random.default_rng(0)
+    # heavy-tailed draws like 1/p(t): spread over 6 orders of magnitude
+    xs = (10.0 ** rng.uniform(0, 6, 4096)) * (rng.random(4096) < 0.7)
+    host = RunningMean()
+    dev = DeviceRunning()
+    for lo in range(0, xs.shape[0], 512):
+        b = xs[lo:lo + 512]
+        host.update_batch(b)
+        dev.state = _merge_moments(*dev.state,
+                                   *_batch_moments(jnp.asarray(b, jnp.float32)))
+    assert dev.count == host.count
+    assert dev.mean == pytest.approx(host.mean, rel=1e-4)
+    assert dev.variance == pytest.approx(host.variance, rel=1e-3)
+    assert dev.half_width(0.90) == pytest.approx(host.half_width(0.90), rel=1e-3)
+
+
+def test_device_observe_stats_match_host_fed_same_walks():
+    """Feed the device walk trace into the host reference accumulators."""
+    import jax
+    cat, joins = _two_chains(2, overlap=0.7)
+    est = JaxEstimator(cat, joins, seed=4, batch=512)
+    host_size, host_ov = RunningMean(), RunningMean()
+    prober = NumpyEstimator(cat, joins).prober
+    pivot = est._pivot(joins)
+    other = [j for j in joins if j.name != pivot.name][0]
+    for _ in range(6):
+        est.observe(joins, rounds=1)
+    # replay the pooled device walks through the float64 host pipeline
+    for rows, prob in est.walk_pool[pivot.name]:
+        ok = prob > 0
+        inv = np.where(ok, 1.0 / np.maximum(prob, 1e-300), 0.0)
+        host_size.update_batch(inv)
+        ind = ok & prober.contains(other.name, rows)
+        host_ov.update_batch(np.where(ind, inv, 0.0))
+    dsize = est.size_stats[pivot.name]
+    dov = est.overlap_stats[frozenset(j.name for j in joins)]
+    assert dsize.count == host_size.count == 6 * 512
+    assert dov.count == host_ov.count
+    assert dsize.mean == pytest.approx(host_size.mean, rel=1e-4)
+    assert dov.mean == pytest.approx(host_ov.mean, rel=1e-4)
+    assert dsize.half_width(0.90) == pytest.approx(host_size.half_width(0.90),
+                                                   rel=1e-3)
+    assert dov.half_width(0.90) == pytest.approx(host_ov.half_width(0.90),
+                                                 rel=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# independent traces: estimates agree with ground truth, CIs bracket it
+# ---------------------------------------------------------------------------
+
+
+def test_device_estimates_and_ci_coverage():
+    cat, joins = _two_chains(1, overlap=0.7)
+    exact_sizes = {j.name: full_join_matrix(cat, j).shape[0] for j in joins}
+    exact_ov = exact_overlap(cat, joins)
+    exact_u = exact_union_size(cat, joins)
+    est = JaxEstimator(cat, joins, seed=1, batch=1024)
+    ov = est.estimate(joins, rel_halfwidth=0.1, max_walks=40_000,
+                      min_walks=8192)
+    sizes = {j.name: est.join_size(j, min_walks=8192) for j in joins}
+    for j in joins:
+        assert sizes[j.name] == pytest.approx(exact_sizes[j.name], rel=0.2)
+        # 90% CI brackets the exact size (seeded; 3x guards tail flake)
+        hw = est.size_stats[j.name].half_width(0.90)
+        assert abs(sizes[j.name] - exact_sizes[j.name]) <= 3 * hw
+    assert ov.value == pytest.approx(exact_ov, rel=0.3)
+    assert abs(ov.value - exact_ov) <= 3 * ov.half_width
+    # union size via |J0| + |J1| - |O|: half-widths compose additively
+    u_est = sum(sizes.values()) - ov.value
+    u_hw = (ov.half_width +
+            sum(est.size_stats[j.name].half_width(0.90) for j in joins))
+    assert abs(u_est - exact_u) <= 3 * u_hw
+    assert u_est == pytest.approx(exact_u, rel=0.25)
+
+
+def test_host_and_device_estimates_agree_on_independent_traces():
+    cat, joins = _two_chains(0, overlap=0.6)
+    h = NumpyEstimator(cat, joins, seed=2, batch=1024)
+    d = JaxEstimator(cat, joins, seed=3, batch=1024)
+    ho = h.estimate(joins, rel_halfwidth=0.15, max_walks=30_000, min_walks=8192)
+    do = d.estimate(joins, rel_halfwidth=0.15, max_walks=30_000, min_walks=8192)
+    # independent streams: estimates must agree within joint CI
+    assert abs(ho.value - do.value) <= 3 * (ho.half_width + do.half_width)
+
+
+def test_device_estimator_empty_join_is_zero():
+    R, S, T = tiny_db(0)
+    S_empty = S.filter(np.zeros(S.nrows, dtype=bool), name="S_empty")
+    cat = Catalog()
+    spec = chain_join("EMPTY", [R, S_empty, T], ["b", "c"])
+    est = JaxEstimator(cat, [spec], seed=0, batch=256)
+    out = est.observe([spec], rounds=2)
+    assert out.value == 0.0
+    assert est.size_stats[spec.name].count == 512
+    assert est.join_size(spec, min_walks=256) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# reservoir pool cap
+# ---------------------------------------------------------------------------
+
+
+def test_reservoir_pool_caps_memory_without_touching_estimates():
+    cat, joins = _two_chains(3)
+    uncapped = NumpyEstimator(cat, joins, seed=9, batch=128, pool_cap=10_000)
+    capped = NumpyEstimator(cat, joins, seed=9, batch=128, pool_cap=4)
+    for _ in range(20):
+        a = uncapped.observe([joins[0]], rounds=1)
+        b = capped.observe([joins[0]], rounds=1)
+        assert a.value == b.value and a.walks == b.walks
+    name = uncapped._pivot([joins[0]]).name
+    assert len(uncapped.walk_pool[name]) == 20
+    assert len(capped.walk_pool[name]) == 4
+    # retained batches are real walk batches
+    for rows, prob in capped.walk_pool[name]:
+        assert prob.shape == (128,)
+    assert capped.drain_pool()[name] is not None
+    assert capped.walk_pool == {}
+
+
+def test_reservoir_pool_unit():
+    pool = ReservoirPool(cap=3, seed=0)
+    for i in range(50):
+        pool.add("J", ({"x": np.array([i])}, np.array([float(i)])))
+    assert pool.n_batches("J") == 3
+    kept = sorted(int(p[0]) for _, p in pool.pools["J"])
+    assert len(set(kept)) == 3          # three distinct batches survive
+    with pytest.raises(ValueError):
+        ReservoirPool(cap=0)
+
+
+# ---------------------------------------------------------------------------
+# ONLINE-UNION routing
+# ---------------------------------------------------------------------------
+
+
+def test_online_union_routes_backend_to_estimator():
+    from repro.core.online import OnlineUnionSampler
+    cat, joins = _two_chains(1, overlap=0.6)
+    ou = OnlineUnionSampler(cat, joins, seed=5, phi=256, rw_batch=64,
+                            backend="jax")
+    assert isinstance(ou.estimator, JaxEstimator)
+    # device membership indexes are shared with the sampling backend
+    assert ou.estimator.members is ou.backend.members
+    ss = ou.sample(100)
+    assert len(ss) == 100
+    ou_np = OnlineUnionSampler(cat, joins, seed=5, phi=256, rw_batch=64)
+    assert isinstance(ou_np.estimator, NumpyEstimator)
+    assert ou_np.rw is ou_np.estimator   # historical alias
+
+
+def test_online_union_unknown_backend_raises():
+    from repro.core.online import OnlineUnionSampler
+    cat, joins = _two_chains(0)
+    with pytest.raises(ValueError, match="unknown backend"):
+        OnlineUnionSampler(cat, joins, backend="torch")
+    with pytest.raises(ValueError, match="unknown estimator"):
+        OnlineUnionSampler(cat, joins, estimator="torch")
+
+
+def test_warmup_backend_routing():
+    from repro.core.framework import warmup
+    cat, joins = _two_chains(2)
+    from repro.core.framework import estimate_union
+    wr = warmup(cat, joins, method="random_walk", backend="jax",
+                rw_max_walks=2048, rw_batch=256)
+    assert isinstance(wr.aux, JaxEstimator)
+    assert estimate_union(wr.oracle).union_size_cover > 0
+    wr_h = warmup(cat, joins, method="histogram", backend="jax")
+    assert isinstance(wr_h.aux, DeviceHistogramOverlap)
+
+
+# ---------------------------------------------------------------------------
+# device histogram overlap == host
+# ---------------------------------------------------------------------------
+
+
+def test_device_histogram_matches_host():
+    from repro.data.workloads import uq3
+    wl = uq3(scale=0.01, overlap=0.3, seed=0)
+    host = HistogramOverlap(wl.cat, wl.joins)
+    dev = DeviceHistogramOverlap(wl.cat, wl.joins)
+    import itertools
+    deltas = [list(d) for r in (1, 2, 3)
+              for d in itertools.combinations(wl.joins, r)]
+    for delta in deltas:
+        h = host.estimate(delta)
+        d = dev.estimate(delta)
+        assert d == pytest.approx(h, rel=1e-5), \
+            f"delta={[j.name for j in delta]}: host {h} device {d}"
+    for j in wl.joins:
+        assert dev.join_size_bound(j) == host.join_size_bound(j)
+
+
+def test_device_histogram_is_sound_upper_bound():
+    for seed in range(3):
+        cat, joins = _two_chains(seed)
+        dev = DeviceHistogramOverlap(cat, joins)
+        assert dev.estimate(joins) >= exact_overlap(cat, joins)
+
+
+# ---------------------------------------------------------------------------
+# WanderJoinSizeEstimator device routing
+# ---------------------------------------------------------------------------
+
+
+def test_wander_join_size_estimator_jax_backend():
+    R, S, T = tiny_db(3)
+    cat = Catalog()
+    spec = chain_join("RST", [R, S, T], ["b", "c"])
+    true_size = full_join_matrix(cat, spec).shape[0]
+    est = WanderJoinSizeEstimator(cat, spec, seed=0, batch=1024, backend="jax")
+    for _ in range(20):
+        est.step()
+    assert est.walks == 20 * 1024
+    assert est.estimate == pytest.approx(true_size, rel=0.15)
+    with pytest.raises(ValueError, match="backend"):
+        WanderJoinSizeEstimator(cat, spec, backend="torch")
