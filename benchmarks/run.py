@@ -13,7 +13,8 @@ import traceback
 
 from . import (bias_ablation, breakdown, data_scale, device_sampler,
                estimation_device, estimation_error, estimation_runtime,
-               kernels_bench, reuse, roofline, sampling_scaling, union_engine)
+               kernels_bench, reuse, roofline, sampling_scaling,
+               sharded_scaling, union_engine)
 from .common import emit, header
 
 MODULES = [
@@ -27,6 +28,7 @@ MODULES = [
     ("bias_ablation", bias_ablation),           # DESIGN §7.9 ablation
     ("device_sampler", device_sampler),         # host vs jitted sampler
     ("union_engine", union_engine),             # fused union rounds (backends)
+    ("sharded_scaling", sharded_scaling),       # mesh scaling (subprocess)
     ("kernels_bench", kernels_bench),           # kernel micro-bench
     ("roofline", roofline),                     # §Roofline table
 ]

@@ -1,7 +1,8 @@
 """Backend contracts for the union sampling engine.
 
 Algorithm 1 consumes exactly two primitives, and every execution substrate
-(host numpy, device JAX, future sharded meshes) supplies the same pair:
+(host numpy, device JAX, mesh-sharded JAX — see
+:mod:`repro.core.sharding`) supplies the same pair:
 
 * :class:`CandidateSource` — batched uniform candidate draws from one join
   (§3.2's sampling subroutine).
@@ -15,7 +16,11 @@ them.  The union samplers in :mod:`repro.core.union_sampler` and
 touching the algorithm layer.  Backends that can fuse a whole Algorithm-1
 round on device additionally expose a ``union_engine`` (see
 :class:`repro.core.backends.jax_backend.JaxUnionSampler`); callers feature-test
-with :func:`Backend.supports_fused_rounds`.
+with :func:`Backend.supports_fused_rounds`.  The third execution layer —
+mesh-partitioned catalogs and ``shard_map``'d Algorithm-1 rounds across many
+devices — lives in :mod:`repro.core.sharding` (:class:`ShardedCatalog` /
+:class:`ShardedUnionSampler`) and plugs in above the fused device engine via
+``SetUnionSampler(backend="jax", mesh=...)``.
 
 See DESIGN.md ("Backend architecture") for the full contract and the guide to
 adding a new backend.

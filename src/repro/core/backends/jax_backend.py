@@ -232,8 +232,13 @@ class DeviceTreeJoin:
             else:
                 self._prepped.append(None)
 
-        self.root_cols = {a: jnp.asarray(_as_i32(c, f"root.{a}"))
-                          for a, c in js.root_rel.columns.items()}
+        self.host_root_cols = {a: _as_i32(c, f"root.{a}")
+                               for a, c in js.root_rel.columns.items()}
+        self.root_cols = {a: jnp.asarray(c)
+                          for a, c in self.host_root_cols.items()}
+        # float64 host prefix retained: the sharding layer cuts weight-quantile
+        # root ranges from it (repro.core.sharding.catalog.ShardedTreeJoin)
+        self.host_root_wprefix = np.asarray(js.root_weight_prefix, np.float64)
         self.root_wprefix = jnp.asarray(js.root_weight_prefix, jnp.float32)
         self.total_weight = float(js.root_weight_total)
         self.n_root = js.root_rel.nrows
@@ -270,12 +275,27 @@ class DeviceTreeJoin:
     # -- one batch of EW tree draws (traced; jit at the call site) ------------
     def draw(self, key: jax.Array, batch: int
              ) -> Tuple[Dict[str, jnp.ndarray], jnp.ndarray]:
+        return self.draw_with_root(key, batch, self.root_wprefix,
+                                   self.root_cols, self.n_root)
+
+    def draw_with_root(self, key: jax.Array, batch: int,
+                       root_wprefix: jnp.ndarray,
+                       root_cols: Dict[str, jnp.ndarray], n_root
+                       ) -> Tuple[Dict[str, jnp.ndarray], jnp.ndarray]:
+        """Tree draw with a caller-supplied root slice.
+
+        The sharding layer passes each shard's local root range (weight
+        prefix, payload columns, row count); the non-root node indexes are
+        this tree's replicated device arrays.  ``draw`` is the degenerate
+        whole-root call, so both paths share one op sequence (and a 1-shard
+        mesh reproduces unsharded draws bit for bit).
+        """
         keys = jax.random.split(key, len(self.node_cfgs) + 1)
         u0 = jax.random.uniform(keys[0], (batch,))
         r_pos, ok = _inverse_cdf_pick(
-            self.root_wprefix, jnp.zeros((batch,), jnp.int32),
-            jnp.full((batch,), self.n_root, jnp.int32), u0)
-        rows = {a: c[r_pos] for a, c in self.root_cols.items()}
+            root_wprefix, jnp.zeros((batch,), jnp.int32),
+            jnp.full((batch,), n_root, jnp.int32), u0)
+        rows = {a: c[r_pos] for a, c in root_cols.items()}
         for i, cfg in enumerate(self.node_cfgs):
             q = _pack_jnp(rows, cfg.edge_attrs, cfg.radices)
             lo, hi = self._ranges(i, q)
@@ -479,18 +499,29 @@ class JaxBackend(Backend):
         self.trees: Dict[str, DeviceTreeJoin] = {
             j.name: DeviceTreeJoin(cat, j, use_pallas=use_pallas)
             for j in self.joins}
-        self.members: Dict[str, DeviceJoinMembership] = {
-            j.name: DeviceJoinMembership(j) for j in self.joins}
         self._sources = {
             j.name: JaxCandidateSource(self.trees[j.name], seed=seed + i,
                                        device_batch=device_batch)
             for i, j in enumerate(self.joins)}
-        self._oracle = JaxMembershipOracle(self.members, self.attrs)
+        # replicated membership indexes are built lazily: the mesh-sharded
+        # engine (repro.core.sharding) keeps its own hash-partitioned
+        # indexes and must not pay for (or hold) the full replicated ones
+        self._members: Optional[Dict[str, DeviceJoinMembership]] = None
+        self._oracle: Optional[JaxMembershipOracle] = None
+
+    @property
+    def members(self) -> Dict[str, DeviceJoinMembership]:
+        if self._members is None:
+            self._members = {j.name: DeviceJoinMembership(j)
+                             for j in self.joins}
+        return self._members
 
     def source(self, join_name: str) -> JaxCandidateSource:
         return self._sources[join_name]
 
     def oracle(self) -> JaxMembershipOracle:
+        if self._oracle is None:
+            self._oracle = JaxMembershipOracle(self.members, self.attrs)
         return self._oracle
 
     def supports_fused_rounds(self) -> bool:
@@ -541,7 +572,6 @@ class JaxUnionSampler:
         self.cover = cover
         self.order = list(cover.order)
         self.trees = [backend.trees[n] for n in self.order]
-        self.members = [backend.members[n] for n in self.order]
         self.attrs = tuple(backend.attrs)
         self.key = jax.random.PRNGKey(seed)
         self.host_rng = np.random.default_rng(seed)
@@ -568,6 +598,9 @@ class JaxUnionSampler:
     def _round_impl(self, probs_cum: jnp.ndarray, carry_need: jnp.ndarray,
                     extra_target: jnp.ndarray, key: jax.Array):
         batch, nj = self.round_batch, len(self.trees)
+        # resolved at trace time (first round): keeps the lazy backend
+        # membership unbuilt for subclasses that override the round program
+        members = [self.backend.members[n] for n in self.order]
         kpick, *jks = jax.random.split(key, nj + 1)
         # (1) multinomial cover selection: categorical picks → histogram
         u = jax.random.uniform(kpick, (batch,))
@@ -583,7 +616,7 @@ class JaxUnionSampler:
             rows, ok = tree.draw(jks[j], batch)
             acc = ok
             for q in range(j):             # pieces earlier in cover order
-                acc = acc & ~self.members[q].contains(rows)
+                acc = acc & ~members[q].contains(rows)
             # (4) compaction: accepted candidates first, original slot order
             perm = jnp.argsort(~acc)
             out_cols.append(tuple(rows[a][perm] for a in self.attrs))

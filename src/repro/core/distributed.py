@@ -1,21 +1,33 @@
 """Distributed union sampling for multi-host training (beyond-paper; DESIGN §2/§5).
 
-Two uniformity-preserving, coordination-free schemes:
+Two uniformity-preserving, coordination-free schemes, now layered on top of
+the backend + sharding stack (:mod:`repro.core.backends`,
+:mod:`repro.core.sharding`):
 
 * **seed-split** (default, zero overhead) — probe-mode Algorithm 1 is
   *stateless across samples*: each accepted tuple is an independent
   ``1/|U|`` draw.  Host ``h`` simply runs its own sampler with fold-in seed
   ``h``; the interleaved global stream is i.i.d. uniform.  This is the direct
-  payoff of the paper's independence guarantee.
+  payoff of the paper's independence guarantee.  On a device mesh this is the
+  *replicated* axis: every host runs its own (optionally sharded) engine on
+  its own seed — ``DistributedUnionSampler(..., backend="jax", mesh=...)``
+  puts each host's fused Algorithm-1 rounds on its local mesh via
+  :class:`~repro.core.sharding.sampler.ShardedUnionSampler`.
 * **hash-partition** — required only for record-mode (which keeps the
   ``orig_join`` revision record): the tuple-fingerprint space is split into
   ``world`` partitions; host ``h`` additionally rejects candidates outside
   partition ``h``, so its record is private and never needs communication.
   Each host's stream is uniform over its partition ``U_h``; hosts are sampled
-  proportionally to ``|U_h| ≈ |U|/world`` when streams are merged.
+  proportionally to ``|U_h| ≈ |U|/world`` when streams are merged.  The
+  *intra*-host analogue of this partition is exactly the sharded engine's
+  membership ownership exchange
+  (:func:`repro.core.sharding.catalog.partition_of_fp32`).
 
 Estimator statistics (:class:`RunningMean`) are associative, so periodic
-cross-host refinement is one all-gather + merge (`merge_statistics`).
+cross-host refinement is one all-gather + merge (`merge_statistics`); the
+on-mesh form of the same merge is
+:func:`repro.core.sharding.stats.psum_merge_moments`.  Sample-stream cost
+accounting merges with :meth:`SamplerStats.merge`.
 """
 
 from __future__ import annotations
@@ -38,12 +50,18 @@ def partition_of(fingerprint: np.ndarray, world: int) -> np.ndarray:
 
 
 class DistributedUnionSampler:
-    """Per-host wrapper around :class:`SetUnionSampler`."""
+    """Per-host wrapper around :class:`SetUnionSampler`.
+
+    ``backend`` and ``mesh`` forward to the inner sampler, so the seed-split
+    scheme can run the fused device engine (or the mesh-sharded engine) today;
+    the numpy default stays the behaviour-identical host reference.
+    """
 
     def __init__(self, cat: Catalog, joins: Sequence[JoinSpec], cover: Cover,
                  rank: int, world: int, scheme: str = "seed-split",
                  membership: str = "probe", join_method: str = "ew",
-                 seed: int = 0):
+                 seed: int = 0, backend="numpy", mesh=None,
+                 round_batch: int = 4096):
         if scheme not in ("seed-split", "hash-partition"):
             raise ValueError(f"unknown scheme {scheme!r}")
         if scheme == "seed-split" and membership != "probe":
@@ -51,7 +69,8 @@ class DistributedUnionSampler:
         self.rank, self.world, self.scheme = rank, world, scheme
         self.inner = SetUnionSampler(
             cat, joins, cover, membership=membership, join_method=join_method,
-            seed=seed * 1_000_003 + rank)
+            seed=seed * 1_000_003 + rank, backend=backend, mesh=mesh,
+            round_batch=round_batch)
 
     def sample(self, n: int, oversample: float = 1.5,
                max_rounds: int = 64) -> SampleSet:
@@ -62,8 +81,9 @@ class DistributedUnionSampler:
         got_home: List[np.ndarray] = []
         got_fp: List[np.ndarray] = []
         count = 0
+        grow = 1.0          # geometric growth across under-filled rounds
         for _ in range(max_rounds):
-            want = max(int((n - count) * self.world * oversample), 32)
+            want = max(int((n - count) * self.world * oversample * grow), 32)
             ss = self.inner.sample(want)
             mine = partition_of(ss.fingerprint, self.world) == self.rank
             idx = np.nonzero(mine)[0]
@@ -74,8 +94,15 @@ class DistributedUnionSampler:
                 count += idx.shape[0]
             if count >= n:
                 break
+            # under-filled round: this partition holds less than the assumed
+            # |U|/world share, so a fixed oversample can stall just short of
+            # the target — widen the next request geometrically
+            grow = min(grow * 2.0, 64.0)
         if count < n:
-            raise RuntimeError("hash-partition sampler under-filled")
+            raise RuntimeError(
+                f"hash-partition sampler under-filled: got {count} of {n} "
+                f"requested samples for partition {self.rank}/{self.world} "
+                f"after {max_rounds} rounds (raise max_rounds/oversample)")
         rows = {a: np.concatenate([r[a] for r in got_rows])[:n]
                 for a in got_rows[0]}
         return SampleSet(self.inner.attrs, rows,
@@ -102,7 +129,6 @@ def merge_streams(parts: Sequence[SampleSet], seed: int = 0) -> SampleSet:
     perm = rng.permutation(home.shape[0])
     stats = SamplerStats()
     for p in parts:
-        for k, v in p.stats.as_dict().items():
-            setattr(stats, k, getattr(stats, k) + v)
+        stats.merge(p.stats)
     return SampleSet(attrs, {a: c[perm] for a, c in rows.items()},
                      home[perm], fp[perm], stats)

@@ -254,8 +254,17 @@ class JaxEstimator(EstimationLoop):
     def __init__(self, cat: Catalog, joins: Sequence[JoinSpec], seed: int = 0,
                  batch: int = 512, pool_cap: int = 512,
                  use_pallas: Optional[bool] = None,
-                 members: Optional[Dict[str, DeviceJoinMembership]] = None):
+                 members: Optional[Dict[str, DeviceJoinMembership]] = None,
+                 mesh=None, mesh_axis: str = "shards"):
         self.cat = cat
+        # mesh=: run each observation as `world` independent walk batches
+        # under shard_map (walker arrays replicated, per-shard fold-in keys)
+        # and merge the per-shard HT moments on-mesh in one psum
+        # (repro.core.sharding.stats.psum_merge_moments) before folding them
+        # into the host-visible DeviceRunning accumulators.
+        self.mesh = mesh
+        self.mesh_axis = mesh_axis
+        self.world = int(mesh.shape[mesh_axis]) if mesh is not None else 1
         self.joins = list(joins)
         self.by_name = {j.name: j for j in self.joins}
         schemas = {tuple(sorted(j.output_attrs)) for j in self.joins}
@@ -302,18 +311,54 @@ class JaxEstimator(EstimationLoop):
             members = [self.members[n] for n in other_names]
             batch = self.batch
 
-            def run(k, size_state, overlap_state):
-                rows, prob, ok = walker.draw(k, batch)
-                inv = jnp.where(ok & (prob > 0),
-                                1.0 / jnp.maximum(prob, _TINY), 0.0)
-                ind = ok
-                for m in members:
-                    ind = ind & m.contains(rows)
-                contrib = jnp.where(ind, inv, 0.0)
-                size_state = _merge_moments(*size_state, *_batch_moments(inv))
-                overlap_state = _merge_moments(*overlap_state,
-                                               *_batch_moments(contrib))
-                return rows, prob, size_state, overlap_state
+            if self.mesh is None:
+                def run(k, size_state, overlap_state):
+                    rows, prob, ok = walker.draw(k, batch)
+                    inv = jnp.where(ok & (prob > 0),
+                                    1.0 / jnp.maximum(prob, _TINY), 0.0)
+                    ind = ok
+                    for m in members:
+                        ind = ind & m.contains(rows)
+                    contrib = jnp.where(ind, inv, 0.0)
+                    size_state = _merge_moments(*size_state,
+                                                *_batch_moments(inv))
+                    overlap_state = _merge_moments(*overlap_state,
+                                                   *_batch_moments(contrib))
+                    return rows, prob, size_state, overlap_state
+            else:
+                from jax.experimental.shard_map import shard_map
+                from jax.sharding import PartitionSpec as P
+                from ..sharding.stats import psum_merge_moments
+                axis, world = self.mesh_axis, self.world
+
+                def shard_run(k):
+                    sid = jax.lax.axis_index(axis)
+                    ks = jax.random.fold_in(k, sid) if world > 1 else k
+                    rows, prob, ok = walker.draw(ks, batch)
+                    inv = jnp.where(ok & (prob > 0),
+                                    1.0 / jnp.maximum(prob, _TINY), 0.0)
+                    ind = ok
+                    for m in members:
+                        ind = ind & m.contains(rows)
+                    contrib = jnp.where(ind, inv, 0.0)
+                    smom = psum_merge_moments(*_batch_moments(inv), axis)
+                    omom = psum_merge_moments(*_batch_moments(contrib), axis)
+                    return ({a: v[None] for a, v in rows.items()},
+                            prob[None],
+                            tuple(x[None] for x in smom),
+                            tuple(x[None] for x in omom))
+
+                sharded = shard_map(shard_run, mesh=self.mesh,
+                                    in_specs=(P(),), out_specs=P(axis),
+                                    check_rep=False)
+
+                def run(k, size_state, overlap_state):
+                    rows, prob, smom, omom = sharded(k)
+                    size_state = _merge_moments(
+                        *size_state, smom[0][0], smom[1][0], smom[2][0])
+                    overlap_state = _merge_moments(
+                        *overlap_state, omom[0][0], omom[1][0], omom[2][0])
+                    return rows, prob, size_state, overlap_state
 
             fn = self._observe_fns[key] = jax.jit(run)
         return fn
@@ -330,8 +375,8 @@ class JaxEstimator(EstimationLoop):
         if walker.is_empty():
             # every walk fails: HT draws are observations of zero
             for _ in range(rounds):
-                sstat.update_zeros(self.batch)
-                stat.update_zeros(self.batch)
+                sstat.update_zeros(self.batch * self.world)
+                stat.update_zeros(self.batch * self.world)
             return OverlapEstimate(stat.mean, stat.half_width(0.90), stat.count)
         others = tuple(sorted(j.name for j in delta if j.name != pivot.name))
         fn = self._observe_fn(pivot.name, others)
@@ -339,9 +384,12 @@ class JaxEstimator(EstimationLoop):
             self.key, sub = jax.random.split(self.key)
             rows, prob, sstat.state, stat.state = fn(sub, sstat.state,
                                                      stat.state)
+            # on a mesh the shards' batches come back stacked (world, batch);
+            # flatten into one pool batch (dead walks keep prob 0)
             self._pool.add(pivot.name, (
-                {a: np.asarray(v, dtype=np.int64) for a, v in rows.items()},
-                np.asarray(prob, dtype=np.float64)))
+                {a: np.asarray(v, dtype=np.int64).reshape(-1)
+                 for a, v in rows.items()},
+                np.asarray(prob, dtype=np.float64).reshape(-1)))
         return OverlapEstimate(stat.mean, stat.half_width(0.90), stat.count)
 
     # -- §5 initialisation ----------------------------------------------------

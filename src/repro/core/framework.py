@@ -51,12 +51,17 @@ def warmup(cat: Catalog, joins: Sequence[JoinSpec], method: str = "exact",
            rw_rel_halfwidth: float = 0.25,
            rw_max_walks: int = 20_000,
            hist_mode: str = "max",
-           backend: str = "numpy") -> WarmupResult:
+           backend: str = "numpy", mesh=None) -> WarmupResult:
     """Build the parameter oracle.  ``backend`` selects the estimation engine
     for the ``histogram`` / ``random_walk`` methods: ``"numpy"`` is the host
     reference, ``"jax"`` runs walks, probes, HT accumulation, and the
-    histogram algebra on device (see repro.core.estimators)."""
+    histogram algebra on device (see repro.core.estimators).  ``mesh``
+    (random_walk + jax only) spreads each walk batch across the mesh with an
+    on-mesh moment merge (see repro.core.sharding.stats)."""
     joins = list(joins)
+    if mesh is not None and (method != "random_walk" or backend != "jax"):
+        raise ValueError("mesh= applies to method='random_walk' with "
+                         "backend='jax' only")
     t0 = time.perf_counter()
     if method == "exact":
         oracle = OverlapOracle(lambda d: exact_overlap(cat, d),
@@ -77,7 +82,9 @@ def warmup(cat: Catalog, joins: Sequence[JoinSpec], method: str = "exact",
         oracle = OverlapOracle(hist.estimate, lambda j: olken_bound(cat, j), joins)
         aux = hist
     elif method == "random_walk":
-        rw = get_estimator(backend, cat, joins, seed=seed, batch=rw_batch)
+        est_kwargs = {"mesh": mesh} if mesh is not None else {}
+        rw = get_estimator(backend, cat, joins, seed=seed, batch=rw_batch,
+                           **est_kwargs)
         oracle = OverlapOracle(
             lambda d: rw.estimate(d, rel_halfwidth=rw_rel_halfwidth,
                                   max_walks=rw_max_walks).value,
@@ -107,9 +114,14 @@ def make_set_union_sampler(cat: Catalog, joins: Sequence[JoinSpec],
                            method: str = "exact", membership: str = "probe",
                            join_method: str = "ew", seed: int = 0,
                            order: Optional[Sequence[str]] = None,
+                           sampler_backend: str = "numpy", mesh=None,
                            **warmup_kw) -> Tuple[SetUnionSampler, UnionEstimates, WarmupResult]:
+    """``sampler_backend``/``mesh`` select the sampling engine; ``backend=``
+    still flows through ``**warmup_kw`` to :func:`warmup` and keeps selecting
+    the estimation engine, as before."""
     wr = warmup(cat, joins, method=method, seed=seed, **warmup_kw)
     est = estimate_union(wr.oracle, order)
     sampler = SetUnionSampler(cat, joins, est.cover, membership=membership,
-                              join_method=join_method, seed=seed)
+                              join_method=join_method, seed=seed,
+                              backend=sampler_backend, mesh=mesh)
     return sampler, est, wr

@@ -23,7 +23,11 @@ Warm-up, φ-batch refinement, and the reuse pool are served by an
 keeps the behaviour-identical host engine; ``backend="jax"`` runs histogram
 initialisation, whole wander-join walk batches, membership probes, and the
 Horvitz–Thompson accumulators on device (sharing the sampling backend's
-membership indexes).  Unknown backend selectors raise.
+membership indexes).  ``backend="jax", mesh=...`` additionally spreads each
+refinement observation across the mesh — ``world`` independent walk batches
+whose HT moments merge on-mesh in one ``psum``
+(:func:`repro.core.sharding.stats.psum_merge_moments`), so φ refines from
+all shards' walks at once.  Unknown backend selectors raise.
 """
 
 from __future__ import annotations
@@ -66,7 +70,7 @@ class OnlineUnionSampler:
                  warm_rounds: int = 2,
                  backend: str | Backend = "numpy",
                  estimator: Optional[str | EstimatorBackend] = None,
-                 pool_cap: int = 512):
+                 pool_cap: int = 512, mesh=None):
         self.cat = cat
         self.joins = list(joins)
         self.names = [j.name for j in self.joins]
@@ -101,10 +105,15 @@ class OnlineUnionSampler:
                     stacklevel=2)
                 est_spec = "numpy"
         est_kwargs = {}
+        if mesh is not None and est_spec != "jax":
+            raise ValueError("mesh= needs the device estimator; use "
+                             "backend='jax' (or estimator='jax')")
         if est_spec == "jax":
             members = getattr(self.backend, "members", None)
             if members is not None:   # share the device membership indexes
                 est_kwargs["members"] = members
+            if mesh is not None:      # refine φ from all shards (on-mesh merge)
+                est_kwargs["mesh"] = mesh
         self.estimator = get_estimator(est_spec, cat, self.joins,
                                        seed=seed + 1, batch=rw_batch,
                                        pool_cap=pool_cap, **est_kwargs)

@@ -1,0 +1,23 @@
+"""Sharded multi-device execution layer (third layer under the samplers).
+
+``ShardedCatalog`` partitions a union's columnar stores across a 1-axis
+:class:`jax.sharding.Mesh` (row-range shards, replicated dict-encodings,
+hash-partitioned membership fingerprints); ``ShardedUnionSampler`` runs the
+fused Algorithm-1 round inside ``shard_map`` with one fingerprint exchange
+per round.  ``SetUnionSampler(backend="jax", mesh=...)`` is the facade entry
+point.  See DESIGN.md ("Sharded execution layer").
+"""
+
+from __future__ import annotations
+
+from .catalog import (SHARD_AXIS, ShardedCatalog, ShardedMembership,
+                      ShardedTreeJoin, make_sampler_mesh, partition_of_fp32,
+                      row_range_bounds)
+from .sampler import ShardedUnionSampler
+from .stats import merge_moment_stack, psum_merge_moments
+
+__all__ = [
+    "SHARD_AXIS", "ShardedCatalog", "ShardedMembership", "ShardedTreeJoin",
+    "ShardedUnionSampler", "make_sampler_mesh", "merge_moment_stack",
+    "partition_of_fp32", "psum_merge_moments", "row_range_bounds",
+]

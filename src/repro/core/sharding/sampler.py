@@ -1,0 +1,226 @@
+"""Mesh-sharded Algorithm-1 rounds: the fused union round under ``shard_map``.
+
+:class:`ShardedUnionSampler` scales the PR-1 fused device round
+(:class:`~repro.core.backends.jax_backend.JaxUnionSampler`) across a 1-axis
+device mesh.  One round, per shard:
+
+1. **replicated cover selection** — every shard derives the same per-slot
+   categorical picks from the shared round key and histograms them into the
+   global per-piece targets (no communication; the histogram covers all
+   ``world × round_batch`` slots of the round),
+2. **local candidate draws** — each shard draws ``round_batch`` i.i.d. EW
+   tree candidates per join from the *whole* join under its own fold-in key
+   (replicated roots — see
+   :class:`~repro.core.sharding.catalog.ShardedTreeJoin` for why root-range
+   pieces would bias fixed-shape consumption),
+3. **one fingerprint exchange** — earlier-piece membership probes are
+   resolved by hash-partition ownership: all shards ``all_gather`` the
+   candidates' per-relation fingerprints, the owner shard answers each
+   probe against its local sorted index, and one ``psum_scatter``
+   (reduce-scatter) ORs the owner verdicts and hands each shard exactly its
+   own candidates' segment (the only collectives in the round),
+4. **local compaction** — accepted candidates are sorted to the front per
+   shard; per-shard accepted counts return to the host, which merges
+   shortfall/surplus banking exactly as the unsharded engine does (the
+   per-piece shortfall is global, so the banked-surplus invariants carry
+   over unchanged).
+
+Exactness: each emitted sample is an i.i.d. ``1/|U|`` draw — the same
+argument as the unsharded engine, because every shard's candidates are
+i.i.d. uniform over the whole join, so their cover-accepted subsequences
+are i.i.d. uniform over the cover piece, exchangeable across shards, and
+any deterministic consumption order (shard-major prefix take, banking) is
+unbiased.  With a 1-device mesh the program degenerates to the unsharded
+round op-for-op, which the equivalence tests pin bit-for-bit against
+``JaxUnionSampler``.
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from ..backends.jax_backend import JaxUnionSampler, fp32_jnp
+from .catalog import ShardedCatalog
+
+
+class ShardedUnionSampler(JaxUnionSampler):
+    """Algorithm-1 top-up rounds over a device mesh.
+
+    ``round_batch`` is the *per-shard* candidate budget; the global round
+    capacity is ``world * round_batch``.  The host loop (selection carry,
+    surplus banking, dead-piece detection, final shuffle) is inherited
+    unchanged from :class:`JaxUnionSampler` — only the round program is
+    replaced by the ``shard_map``'d version.
+    """
+
+    def __init__(self, scat: ShardedCatalog, cover, seed: int = 0,
+                 round_batch: int = 4096, dead_rounds: int = 8,
+                 max_rounds: int = 4096, surplus_cap: Optional[int] = None,
+                 stats=None):
+        self.scat = scat
+        self.mesh = scat.mesh
+        self.saxis = scat.axis
+        self.world = scat.world
+        self.shard_batch = int(round_batch)
+        super().__init__(scat.backend, cover, seed=seed,
+                         round_batch=self.shard_batch * self.world,
+                         dead_rounds=dead_rounds, max_rounds=max_rounds,
+                         surplus_cap=surplus_cap, stats=stats)
+        self.strees = [scat.trees[n] for n in self.order]
+        self.smems = [scat.members[n] for n in self.order]
+        self._state = {"roots": [t.state() for t in self.strees],
+                       "mem": [m.state() for m in self.smems]}
+        self._round_prog = self._build_round_prog()
+        self._round_jit = self._sharded_round      # host-loop entry point
+
+    # -- the shard_map'd round ------------------------------------------------
+    def _build_round_prog(self):
+        mesh, axis, world = self.mesh, self.saxis, self.world
+        nj = len(self.order)
+        B = self.shard_batch
+        GB = self.round_batch                       # world * B (global slots)
+        dtrees = [t.tree for t in self.strees]      # replicated child indexes
+        out_attrs = self.attrs
+        # flat probe plan: (join j, earlier piece q, relation ridx)
+        plan: List[Tuple[int, int, int, Tuple[str, ...], int]] = []
+        for j in range(nj):
+            for q in range(j):
+                for ridx, r in enumerate(self.smems[q].rels):
+                    plan.append((j, q, ridx, r.attrs, r.kmax))
+        n_probe = len(plan)
+
+        def round_fn(probs_cum, carry_need, extra_target, key, st):
+            sid = jax.lax.axis_index(axis)
+            # (1) replicated multinomial cover selection over all GB slots
+            kpick, *jks = jax.random.split(key, nj + 1)
+            u = jax.random.uniform(kpick, (GB,))
+            pick = jnp.clip(jnp.searchsorted(probs_cum, u, side="right"
+                                             ).astype(jnp.int32), 0, nj - 1)
+            valid = (jnp.arange(GB) < extra_target).astype(jnp.int32)
+            need = carry_need + jnp.zeros((nj,), jnp.int32).at[pick].add(valid)
+
+            # (2) local i.i.d. whole-join draws (replicated roots, per-shard
+            # fold-in keys — see ShardedTreeJoin for why ranges would bias)
+            rows_j, ok_j = [], []
+            for j in range(nj):
+                rst = st["roots"][j]
+                prefix = rst["prefix"][0]
+                cols = {a: c[0] for a, c in rst["cols"].items()}
+                kd = (jks[j] if world == 1          # bit-for-bit unsharded
+                      else jax.random.fold_in(jks[j], sid))
+                rows, ok = dtrees[j].draw_with_root(kd, B, prefix, cols,
+                                                    rst["n_root"][0])
+                rows_j.append(rows)
+                ok_j.append(ok)
+
+            # (3) one fingerprint exchange answers every earlier-piece probe
+            def window_probe(s1, s2, n_own, qq1, qq2, kmax):
+                lo = jnp.searchsorted(s1, qq1, side="left")
+                m = jnp.zeros(qq1.shape, bool)
+                cap = s1.shape[0]
+                for k in range(kmax):   # duplicate window (tiny, static)
+                    pos = jnp.minimum(lo + k, cap - 1)
+                    m = m | ((lo + k < n_own) & (s1[pos] == qq1)
+                             & (s2[pos] == qq2))
+                return m
+
+            found = None
+            if n_probe and world == 1:
+                # fully local: one shard owns everything, no collectives
+                found = []
+                for (j, q, ridx, attrs, kmax) in plan:
+                    mst = st["mem"][q][ridx]
+                    found.append(window_probe(
+                        mst["fp1"][0], mst["fp2"][0], mst["n_owned"][0],
+                        fp32_jnp([rows_j[j][a] for a in attrs], salt=1),
+                        fp32_jnp([rows_j[j][a] for a in attrs], salt=2),
+                        kmax))
+            elif n_probe:
+                # all-gather the candidates' fingerprints; each shard
+                # answers the probes it owns against its local index; a
+                # reduce-scatter ORs the owner verdicts and hands every
+                # shard exactly its own candidates' segment
+                GN = world * B
+                q1 = jnp.stack([fp32_jnp([rows_j[j][a] for a in attrs],
+                                         salt=1)
+                                for (j, q, ridx, attrs, kmax) in plan])
+                q2 = jnp.stack([fp32_jnp([rows_j[j][a] for a in attrs],
+                                         salt=2)
+                                for (j, q, ridx, attrs, kmax) in plan])
+                g1 = jnp.transpose(jax.lax.all_gather(q1, axis),
+                                   (1, 0, 2)).reshape(n_probe, GN)
+                g2 = jnp.transpose(jax.lax.all_gather(q2, axis),
+                                   (1, 0, 2)).reshape(n_probe, GN)
+                hits = []
+                for p, (j, q, ridx, attrs, kmax) in enumerate(plan):
+                    mst = st["mem"][q][ridx]
+                    qq1, qq2 = g1[p], g2[p]
+                    m = window_probe(mst["fp1"][0], mst["fp2"][0],
+                                     mst["n_owned"][0], qq1, qq2, kmax)
+                    # only the fp owner may answer (hash-partition ownership)
+                    m = m & ((qq1 % jnp.uint32(world)).astype(jnp.int32)
+                             == sid)
+                    hits.append(m.astype(jnp.int32))
+                found = [f > 0 for f in jax.lax.psum_scatter(
+                    jnp.stack(hits), axis, scatter_dimension=1, tiled=True)]
+
+            # (4) local acceptance + compaction
+            out_cols, okc, accc = [], [], []
+            p = 0
+            for j in range(nj):
+                acc = ok_j[j]
+                for q in range(j):
+                    contained = jnp.ones((B,), bool)
+                    for _ in range(len(self.smems[q].rels)):
+                        contained = contained & found[p]
+                        p += 1
+                    acc = acc & ~contained
+                perm = jnp.argsort(~acc)
+                out_cols.append(tuple(rows_j[j][a][perm][None]
+                                      for a in out_attrs))
+                okc.append(jnp.sum(ok_j[j]))
+                accc.append(jnp.sum(acc))
+            okc = jnp.stack(okc).astype(jnp.int32)[None]
+            accc = jnp.stack(accc).astype(jnp.int32)[None]
+            return need[None], okc, accc, out_cols
+
+        return jax.jit(shard_map(
+            round_fn, mesh=mesh,
+            in_specs=(P(), P(), P(), P(), P(axis)),
+            out_specs=P(axis), check_rep=False))
+
+    # -- host-format adapter --------------------------------------------------
+    def _sharded_round(self, probs_cum, carry_need, extra_target, key):
+        """Run one mesh round; return it in the unsharded host-loop format.
+
+        ``out_cols[j]`` holds piece ``j``'s accepted candidates first (the
+        host loop reads ``[:take]`` and banks ``[take:accepted]``); per-shard
+        counts merge by summation — the shortfall/surplus algebra is global.
+        """
+        need, okc, accc, out_cols = self._round_prog(
+            probs_cum, carry_need, extra_target, key, self._state)
+        need = np.asarray(need)[0].astype(np.int64)
+        ok_counts = np.asarray(okc).sum(axis=0)
+        acc_ps = np.asarray(accc)                   # (world, nj)
+        acc_counts = acc_ps.sum(axis=0)
+        take = np.minimum(need, acc_counts)
+        shortfall = need - take
+        cols: List[Tuple[np.ndarray, ...]] = []
+        for j in range(len(self.order)):
+            if self.world == 1:
+                cols.append(tuple(np.asarray(c)[0] for c in out_cols[j]))
+            else:
+                per_attr = []
+                for c in out_cols[j]:
+                    c = np.asarray(c)               # (world, B)
+                    per_attr.append(np.concatenate(
+                        [c[s, :acc_ps[s, j]] for s in range(self.world)])
+                        if acc_counts[j] else c[0, :0])
+                cols.append(tuple(per_attr))
+        return cols, ok_counts, acc_counts, take, shortfall

@@ -1,0 +1,56 @@
+"""On-mesh statistic merges — the associative algebra behind cross-shard
+estimation.
+
+Every statistic the estimation layer keeps (``RunningMean`` on host,
+``DeviceRunning`` on device) is a moment triple ``(count, mean, M2)`` whose
+merge is associative (Chan et al.); the same structure lets wander-join
+statistics from many shards combine into one global estimate with a single
+``psum``.  :func:`psum_merge_moments` is the collective form used inside
+``shard_map`` (see :class:`repro.core.estimators.jax_estimator.JaxEstimator`
+with ``mesh=``), :func:`merge_moment_stack` the host-side reference the tests
+compare against (and :func:`repro.core.distributed.merge_statistics`'s device
+twin).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+Moments = Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]   # (count, mean, M2)
+
+
+def psum_merge_moments(n: jnp.ndarray, mean: jnp.ndarray, m2: jnp.ndarray,
+                       axis_name: str) -> Moments:
+    """Merge per-shard Welford moments across a mesh axis in one ``psum``.
+
+    Uses the pooled-moments identity
+    ``M2 = Σ_s M2_s + Σ_s n_s (mean_s - mean)²`` — algebraically identical to
+    folding the shards sequentially with Chan's merge, but order-free and a
+    single collective.  Call inside ``shard_map``; every shard returns the
+    same merged triple.
+    """
+    nf = n.astype(jnp.float32)
+    total = jax.lax.psum(n, axis_name)
+    totalf = jnp.maximum(total.astype(jnp.float32), 1.0)
+    gmean = jax.lax.psum(nf * mean, axis_name) / totalf
+    gm2 = jax.lax.psum(m2 + nf * (mean - gmean) ** 2, axis_name)
+    return total, gmean, gm2
+
+
+def merge_moment_stack(n: jnp.ndarray, mean: jnp.ndarray, m2: jnp.ndarray
+                       ) -> Moments:
+    """Host/jit reference: merge stacked per-shard moments ``(world,)`` → one.
+
+    Same pooled-moments identity as :func:`psum_merge_moments` with the
+    ``psum`` replaced by an axis-0 sum, so tests can check the collective
+    against an explicit all-gather + merge.
+    """
+    nf = n.astype(jnp.float32)
+    total = jnp.sum(n)
+    totalf = jnp.maximum(total.astype(jnp.float32), 1.0)
+    gmean = jnp.sum(nf * mean) / totalf
+    gm2 = jnp.sum(m2 + nf * (mean - gmean) ** 2)
+    return total, gmean, gm2

@@ -30,7 +30,11 @@ All samplers draw candidates and probe membership through the backend layer
 reference engine, behaviour-identical to the pre-backend code;
 ``backend="jax"`` runs whole Algorithm-1 rounds as one jitted device program
 (:class:`repro.core.backends.jax_backend.JaxUnionSampler`; probe membership
-only — record/strict/predicate modes stay on the host engine).
+only — record/strict/predicate modes stay on the host engine).  Adding
+``mesh=`` lifts the fused rounds onto a device mesh
+(:class:`repro.core.sharding.ShardedUnionSampler`: per-shard draws from the
+mesh-partitioned catalog, hash-partition membership exchange; a 1-device
+mesh reproduces the unsharded engine bit for bit).
 """
 
 from __future__ import annotations
@@ -64,6 +68,21 @@ class SamplerStats:
 
     def as_dict(self) -> Dict[str, int]:
         return dataclasses.asdict(self)
+
+    def merge(self, other: "SamplerStats") -> "SamplerStats":
+        """Associative in-place merge (counter sum); returns ``self``.
+
+        The counter twin of :meth:`repro.core.size_estimation.RunningMean.
+        merge` — used by :func:`repro.core.distributed.merge_streams` and the
+        serve queue to combine per-stream cost accounting.
+        """
+        for f in dataclasses.fields(self):
+            setattr(self, f.name, getattr(self, f.name) + getattr(other, f.name))
+        return self
+
+    def snapshot(self) -> "SamplerStats":
+        """Point-in-time copy (engines mutate their stats in place)."""
+        return dataclasses.replace(self)
 
 
 @dataclasses.dataclass
@@ -204,7 +223,7 @@ class SetUnionSampler:
                  seed: int = 0, retry_rounds: int = 64,
                  candidate_batch: int = 32, predicate=None,
                  backend: str | Backend = "numpy",
-                 round_batch: int = 4096):
+                 round_batch: int = 4096, mesh=None):
         if membership not in ("probe", "record"):
             raise ValueError("membership must be 'probe' or 'record'")
         self.cat = cat
@@ -215,7 +234,10 @@ class SetUnionSampler:
         self.backend = get_backend(backend, cat, self.joins, join_method=join_method,
                                    seed=seed)
         self.sources = {j.name: self.backend.source(j.name) for j in self.joins}
-        self.prober = self.backend.oracle()
+        # lazy: the fused/sharded engines never probe through the host-facing
+        # oracle, and the jax backend builds its replicated membership
+        # indexes on first oracle access only
+        self._prober = None
         self.membership = membership
         self.strict_paper_loop = strict_paper_loop
         self.rng = np.random.default_rng(seed)
@@ -230,7 +252,11 @@ class SetUnionSampler:
         # record mode state: fingerprint -> home join order-index
         self._record: Dict[int, int] = {}
         # fused device engine: one jitted program per Algorithm-1 round
+        # (mesh= lifts it onto the sharded multi-device layer)
         self._engine = None
+        if mesh is not None and not self.backend.supports_fused_rounds():
+            raise ValueError("mesh= requires a fused-round backend; use "
+                             "backend='jax'")
         if self.backend.supports_fused_rounds():
             if membership != "probe":
                 raise ValueError("membership='record' needs host bookkeeping; "
@@ -241,12 +267,26 @@ class SetUnionSampler:
             if predicate is not None:
                 raise ValueError("rejection predicates are host objects; use "
                                  "backend='numpy' (or pushdown() pre-filter)")
-            from .backends.jax_backend import JaxUnionSampler
-            self._engine = JaxUnionSampler(
-                self.backend, cover, seed=seed, round_batch=round_batch,
-                stats=self.stats)
+            if mesh is not None:
+                from .sharding import ShardedCatalog, ShardedUnionSampler
+                scat = ShardedCatalog(cat, self.joins, mesh=mesh,
+                                      backend=self.backend)
+                self._engine = ShardedUnionSampler(
+                    scat, cover, seed=seed, round_batch=round_batch,
+                    stats=self.stats)
+            else:
+                from .backends.jax_backend import JaxUnionSampler
+                self._engine = JaxUnionSampler(
+                    self.backend, cover, seed=seed, round_batch=round_batch,
+                    stats=self.stats)
 
     # ------------------------------------------------------------------ util
+    @property
+    def prober(self):
+        if self._prober is None:
+            self._prober = self.backend.oracle()
+        return self._prober
+
     def _selection_probs(self) -> np.ndarray:
         p = np.asarray(self.cover.selection_probs(), dtype=np.float64)
         p = np.maximum(p, 0)

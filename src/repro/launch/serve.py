@@ -10,14 +10,16 @@ Two modes:
       PYTHONPATH=src python -m repro.launch.serve --arch minitron-8b --smoke \
           --requests 8 --max-new 16
 
-* ``--mode samples`` — serve uniform union samples straight from the
-  device-resident engine (``SetUnionSampler(backend="jax")``): each request
-  asks for a batch of samples; the fused Algorithm-1 round keeps a per-piece
-  surplus bank, so steady-state requests are served from device rounds with
-  no per-request recompilation.
+* ``--mode samples`` — serve uniform union samples through the streaming
+  :class:`repro.serve.SampleService` (prefetched sample queue + request
+  batching) over the device-resident engine, optionally mesh-sharded:
+  ``--shards k`` builds a k-device mesh and runs the shard_map'd
+  Algorithm-1 rounds of ``repro.core.sharding`` (on CPU set
+  ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` first).
 
       PYTHONPATH=src python -m repro.launch.serve --mode samples \
-          --workload UQ1 --requests 16 --samples 4096 --backend jax
+          --workload UQ1 --requests 16 --samples 4096 --backend jax \
+          --shards 4
 """
 
 from __future__ import annotations
@@ -32,28 +34,40 @@ import numpy as np
 
 
 def serve_samples(args) -> None:
-    """Union-sample serving loop from the (device) sampling engine."""
+    """Union-sample serving loop through the streaming SampleService."""
     from ..core.framework import estimate_union, warmup
     from ..core.union_sampler import SetUnionSampler
     from ..data.workloads import WORKLOADS
+    from ..serve import SampleService
 
     wl = WORKLOADS[args.workload](scale=args.scale, seed=args.seed)
     wr = warmup(wl.cat, wl.joins, method="histogram")
     est = estimate_union(wr.oracle)
+    mesh = None
+    if args.shards:
+        from ..core.sharding import make_sampler_mesh
+        mesh = make_sampler_mesh(world=args.shards)
     sampler = SetUnionSampler(wl.cat, wl.joins, est.cover, seed=args.seed,
                               backend=args.backend,
-                              round_batch=args.round_batch)
+                              round_batch=args.round_batch, mesh=mesh)
     sampler.sample(256)                     # warm up / compile
-    t0 = time.time()
-    served = 0
-    for rid in range(args.requests):
-        ss = sampler.sample(args.samples)
-        served += len(ss)
-    dt = time.time() - t0
+    with SampleService(sampler, batch=args.round_batch,
+                       prefetch=args.prefetch) as svc:
+        svc.request(args.samples)           # fill the pipeline
+        t0 = time.time()
+        served = 0
+        for rid in range(args.requests):
+            ss = svc.request(args.samples)
+            served += len(ss)
+        dt = time.time() - t0
+        st = svc.stats()
+    shard_note = f", shards={args.shards}" if args.shards else ""
     print(f"served {args.requests} requests x {args.samples} samples "
           f"({served} total) in {dt:.2f}s — "
           f"{served/max(dt, 1e-9):,.0f} samples/s "
-          f"[backend={args.backend}]", flush=True)
+          f"[backend={args.backend}{shard_note}; "
+          f"psi={st.candidate_draws}, rejects={st.cover_rejects}]",
+          flush=True)
 
 
 def main(argv: Optional[list] = None) -> None:
@@ -72,6 +86,10 @@ def main(argv: Optional[list] = None) -> None:
     ap.add_argument("--samples", type=int, default=4096)
     ap.add_argument("--backend", default="jax")
     ap.add_argument("--round-batch", type=int, default=8192)
+    ap.add_argument("--shards", type=int, default=0,
+                    help="mesh size for the sharded engine (0 = unsharded)")
+    ap.add_argument("--prefetch", type=int, default=2,
+                    help="prefetched sample batches in the serve queue")
     args = ap.parse_args(argv)
 
     if args.mode == "samples":

@@ -1,1 +1,11 @@
-"""serve subpackage."""
+"""Serving front-end: streaming union-sample service.
+
+:class:`SampleService` wraps any union sampling engine (host, fused device,
+mesh-sharded) with a prefetched sample queue and request batching; the serve
+CLI (``python -m repro.launch.serve --mode samples``) and
+``examples/long_context_serving.py`` route through it.
+"""
+
+from .service import SampleService
+
+__all__ = ["SampleService"]
