@@ -1,7 +1,7 @@
 """Union-engine benchmark: fused device rounds across workload shapes.
 
 Sweeps the backend-abstracted ``SetUnionSampler`` over union workloads
-(chain-only UQ1, tree-shaped UQ3) and round-batch sizes, reporting
+(chain-only UQ1, tree-shaped UQ3, cyclic UQ4) and round-batch sizes, reporting
 samples/sec for the host engine vs the fused jitted engine plus the
 device engine's accounting (candidate draws per emitted sample).  The
 device path runs one jitted program per Algorithm-1 round — multinomial
@@ -15,7 +15,7 @@ import time
 
 from repro.core.framework import estimate_union, warmup
 from repro.core.union_sampler import SetUnionSampler
-from repro.data.workloads import uq1, uq3
+from repro.data.workloads import uq1, uq3, uq4
 
 from .common import emit
 
@@ -55,6 +55,10 @@ def main(small: bool = True) -> None:
     _bench_one("uq1x5", wl5, n, 16384)
     wlt = uq3(scale=scale, overlap=0.3, seed=0)
     _bench_one("uq3tree", wlt, n, 16384)
+    # cyclic union (§8.2 skeleton+residual rejection inside the fused round);
+    # smaller n — the host engine pays the residual rejections per walk
+    wlc = uq4(scale=scale, seed=0)
+    _bench_one("uq4cyclic", wlc, n // 5, 16384)
     # round-batch sensitivity on the 2-join union
     for rb in (4096, 32768) if small else (8192, 65536):
         _bench_one(f"uq1x2_rb{rb}", wl2, n, rb)

@@ -13,14 +13,22 @@ A :class:`Backend` bundles one source per join plus one oracle over all of
 them.  The union samplers in :mod:`repro.core.union_sampler` and
 :mod:`repro.core.online` are written against these protocols only; selecting
 ``backend="jax"`` swaps the host engine for the device-resident one without
-touching the algorithm layer.  Backends that can fuse a whole Algorithm-1
-round on device additionally expose a ``union_engine`` (see
+touching the algorithm layer.  Both engines cover every join shape of the
+paper — chain, acyclic tree, and cyclic (§8.2 skeleton+residual); a device
+join that trips an engine limit (packed edge-key domain beyond int32,
+negative dict values) degrades to a host candidate source per join with a
+warning rather than failing the union.  Backends that can fuse a whole
+Algorithm-1 round on device additionally expose a ``union_engine`` (see
 :class:`repro.core.backends.jax_backend.JaxUnionSampler`); callers feature-test
 with :func:`Backend.supports_fused_rounds`.  The third execution layer —
 mesh-partitioned catalogs and ``shard_map``'d Algorithm-1 rounds across many
 devices — lives in :mod:`repro.core.sharding` (:class:`ShardedCatalog` /
 :class:`ShardedUnionSampler`) and plugs in above the fused device engine via
 ``SetUnionSampler(backend="jax", mesh=...)``.
+
+Sources may optionally expose ``pop_residual_rejects() -> int`` (drain-style
+counter of §8.2 residual rejections); the union samplers fold it into
+``SamplerStats.residual_rejects`` after every ``draw``.
 
 See DESIGN.md ("Backend architecture") for the full contract and the guide to
 adding a new backend.

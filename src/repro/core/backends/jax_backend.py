@@ -3,15 +3,21 @@
 Three layers, bottom-up:
 
 * :class:`DeviceTreeJoin` — generalises the jitted chain sampler to arbitrary
-  acyclic (tree) joins.  Each non-root node keeps its child rows sorted by a
-  **composite mixed-radix key** over the node's edge attributes (radices are
-  per-attribute domain widths shared across the whole join, so parent-side
-  query keys pack identically and probes stay exact), plus prefix-summed EW
-  weights; one draw is root inverse-CDF + per-node ``searchsorted`` →
-  ranged weighted pick → payload gathers, all ``jax.lax`` over fixed shapes.
-  On TPU the per-node range probe routes through the two-phase Pallas
-  pipeline of :mod:`repro.kernels.searchsorted` (``use_pallas``); on CPU it
-  lowers via ``jnp.searchsorted``.
+  acyclic (tree) joins **and to cyclic joins via the paper's §8.2
+  skeleton+residual scheme**.  Each non-root node keeps its child rows sorted
+  by a **composite mixed-radix key** over the node's edge attributes (radices
+  are per-attribute domain widths shared across the whole join, so
+  parent-side query keys pack identically and probes stay exact), plus
+  prefix-summed EW weights; one draw is root inverse-CDF + per-node
+  ``searchsorted`` → ranged weighted pick → payload gathers, all ``jax.lax``
+  over fixed shapes.  For cyclic joins the EW weights cover the acyclic
+  skeleton only; each residual (cycle-closing) edge is then verified inside
+  the same traced draw with a batched sorted-key membership probe — uniform
+  pick among the ``d`` matches + an accumulated ``Π d/M`` acceptance test —
+  mirroring the host :class:`~repro.core.join_sampler.JoinSampler`
+  semantics exactly.  On TPU the per-node range probe routes through the
+  two-phase Pallas pipeline of :mod:`repro.kernels.searchsorted`
+  (``use_pallas``); on CPU it lowers via ``jnp.searchsorted``.
 * :class:`DeviceJoinMembership` — batched "is tuple in join J" probes as
   sorted-row-fingerprint lookups resident on device: per base relation, rows
   are indexed by a 32-bit primary fingerprint (sorted) with a 32-bit
@@ -30,9 +36,12 @@ Three layers, bottom-up:
 ``SetUnionSampler(backend="jax")`` / ``OnlineUnionSampler(backend="jax")``
 select the device engine without touching the algorithm layer.
 
-Limits (all checked at build time with clear errors): acyclic joins,
-``method="ew"`` weights, non-negative dict-encoded values whose packed edge
-domains fit in int32 (the device substrate is 32-bit; see DESIGN.md).
+Limits (all checked at build time with clear errors): ``method="ew"``
+weights, non-negative dict-encoded values whose packed edge domains fit in
+int32 (the device substrate is 32-bit; see DESIGN.md).  Chain, acyclic, and
+cyclic (§8.2 skeleton+residual) join shapes all run on device; a union whose
+*individual* joins trip a device limit degrades those joins to host
+candidate draws with a single warning instead of rejecting the whole union.
 """
 
 from __future__ import annotations
@@ -172,17 +181,26 @@ class _NodeCfg:
     edge_attrs: Tuple[str, ...]
     radices: Tuple[int, ...]
     new_attrs: Tuple[str, ...]
+    kind: str = "tree"               # "tree" | "residual" (§8.2 cycle closer)
+    max_degree: int = 0              # residual only: M of the d/M acceptance
 
 
 class DeviceTreeJoin:
-    """Acyclic join prepared for jitted EW sampling (chains are a special case)."""
+    """Join prepared for jitted EW sampling (chain ⊂ tree ⊂ skeleton+residual).
+
+    Acyclic (tree) joins draw with zero rejection.  Cyclic joins follow the
+    paper's §8.2 scheme, all inside the same traced draw: the EW weights are
+    computed over the acyclic *skeleton* only, each residual (cycle-closing)
+    node keeps the identical sorted composite-key index as a tree node, and a
+    draw resolves every residual edge with the same batched sorted-key range
+    probe — a uniform pick among the ``d`` matches plus an accumulated
+    ``Π d/M`` acceptance test (``M`` = the residual index's max degree, as in
+    the host :class:`~repro.core.join_sampler.JoinSampler`).  Residual
+    rejections surface through the third element of ``draw``'s return.
+    """
 
     def __init__(self, cat: Catalog, spec: JoinSpec,
                  use_pallas: Optional[bool] = None):
-        if spec.is_cyclic:
-            raise ValueError(
-                f"jax backend: join {spec.name!r} is cyclic; the device tree "
-                "engine handles acyclic joins only (use backend='numpy')")
         if use_pallas is None:
             from ...kernels.ops import on_tpu
             use_pallas = on_tpu()
@@ -210,17 +228,25 @@ class DeviceTreeJoin:
             if dom >= _I32_LIM:
                 raise ValueError(
                     f"jax backend: packed edge-key domain of node {n.alias!r} "
-                    f"({dom}) exceeds int32; use backend='numpy'")
+                    f"({dom}) exceeds int32 (the device substrate is 32-bit; "
+                    "use backend='numpy')")
             key = _pack_np([rel.columns[a] for a in n.edge_attrs], radices)
             perm = np.argsort(key, kind="stable")
             skeys = key[perm].astype(np.int32)
-            w = js.node_weights[n.alias]
-            wp = np.zeros(rel.nrows + 1, dtype=np.float64)
-            np.cumsum(w[perm], out=wp[1:])
+            if n.kind == "residual":
+                # §8.2: residual picks are uniform among matches via
+                # floor(u*d) in _residual_step — no weight prefix needed;
+                # the EW weights cover the skeleton only (host parity)
+                wp = np.zeros(1, dtype=np.float64)
+            else:
+                w = js.node_weights[n.alias]
+                wp = np.zeros(rel.nrows + 1, dtype=np.float64)
+                np.cumsum(w[perm], out=wp[1:])
             new_attrs = tuple(a for a in rel.attrs if a not in produced)
             produced.update(rel.attrs)
-            self.node_cfgs.append(_NodeCfg(n.alias, tuple(n.edge_attrs),
-                                           radices, new_attrs))
+            self.node_cfgs.append(_NodeCfg(
+                n.alias, tuple(n.edge_attrs), radices, new_attrs,
+                kind=n.kind, max_degree=int(js.edges[n.alias].max_degree)))
             self.sorted_keys.append(jnp.asarray(skeys))
             self.perm.append(jnp.asarray(perm.astype(np.int32)))
             self.wprefix.append(jnp.asarray(wp, jnp.float32))
@@ -232,6 +258,7 @@ class DeviceTreeJoin:
             else:
                 self._prepped.append(None)
 
+        self.has_residual = any(c.kind == "residual" for c in self.node_cfgs)
         self.host_root_cols = {a: _as_i32(c, f"root.{a}")
                                for a, c in js.root_rel.columns.items()}
         self.root_cols = {a: jnp.asarray(c)
@@ -274,14 +301,31 @@ class DeviceTreeJoin:
 
     # -- one batch of EW tree draws (traced; jit at the call site) ------------
     def draw(self, key: jax.Array, batch: int
-             ) -> Tuple[Dict[str, jnp.ndarray], jnp.ndarray]:
+             ) -> Tuple[Dict[str, jnp.ndarray], jnp.ndarray, jnp.ndarray]:
         return self.draw_with_root(key, batch, self.root_wprefix,
                                    self.root_cols, self.n_root)
+
+    def _residual_step(self, i: int, cfg: _NodeCfg, rows, ok, acc_ratio, u):
+        """One residual edge: sorted-key probe, uniform pick, d/M factor."""
+        q = _pack_jnp(rows, cfg.edge_attrs, cfg.radices)
+        lo, hi = self._ranges(i, q)
+        d = hi - lo
+        off = jnp.floor(u * jnp.maximum(d, 1).astype(jnp.float32)
+                        ).astype(jnp.int32)
+        pos = lo + jnp.minimum(off, jnp.maximum(d - 1, 0))
+        ok = ok & (d > 0)
+        acc_ratio = acc_ratio * (d.astype(jnp.float32)
+                                 / jnp.float32(max(cfg.max_degree, 1)))
+        child = self.perm[i][jnp.clip(pos, 0, self.perm[i].shape[0] - 1)]
+        for a, c in self.cols[i].items():
+            rows[a] = c[child]
+        return rows, ok, acc_ratio
 
     def draw_with_root(self, key: jax.Array, batch: int,
                        root_wprefix: jnp.ndarray,
                        root_cols: Dict[str, jnp.ndarray], n_root
-                       ) -> Tuple[Dict[str, jnp.ndarray], jnp.ndarray]:
+                       ) -> Tuple[Dict[str, jnp.ndarray], jnp.ndarray,
+                                  jnp.ndarray]:
         """Tree draw with a caller-supplied root slice.
 
         The sharding layer passes each shard's local root range (weight
@@ -289,23 +333,38 @@ class DeviceTreeJoin:
         this tree's replicated device arrays.  ``draw`` is the degenerate
         whole-root call, so both paths share one op sequence (and a 1-shard
         mesh reproduces unsharded draws bit for bit).
+
+        Returns ``(rows, accept, walk_ok)``: ``walk_ok`` marks walks whose
+        every edge (tree and residual) had a match; ``accept`` additionally
+        applies the §8.2 residual ``Π d/M`` acceptance test, so
+        ``walk_ok & ~accept`` are exactly the residual rejections.  On
+        acyclic joins the two are the same array.
         """
-        keys = jax.random.split(key, len(self.node_cfgs) + 1)
+        keys = jax.random.split(key, len(self.node_cfgs) + 1
+                                + (1 if self.has_residual else 0))
         u0 = jax.random.uniform(keys[0], (batch,))
         r_pos, ok = _inverse_cdf_pick(
             root_wprefix, jnp.zeros((batch,), jnp.int32),
             jnp.full((batch,), n_root, jnp.int32), u0)
         rows = {a: c[r_pos] for a, c in root_cols.items()}
+        acc_ratio = jnp.ones((batch,), jnp.float32)
         for i, cfg in enumerate(self.node_cfgs):
+            u = jax.random.uniform(keys[i + 1], (batch,))
+            if cfg.kind == "residual":
+                rows, ok, acc_ratio = self._residual_step(
+                    i, cfg, rows, ok, acc_ratio, u)
+                continue
             q = _pack_jnp(rows, cfg.edge_attrs, cfg.radices)
             lo, hi = self._ranges(i, q)
-            u = jax.random.uniform(keys[i + 1], (batch,))
             pos, alive = _inverse_cdf_pick(self.wprefix[i], lo, hi, u)
             ok = ok & alive & (hi > lo)
             child = self.perm[i][jnp.clip(pos, 0, self.perm[i].shape[0] - 1)]
             for a, c in self.cols[i].items():
                 rows[a] = c[child]
-        return rows, ok
+        if not self.has_residual:
+            return rows, ok, ok
+        u_acc = jax.random.uniform(keys[-1], (batch,))
+        return rows, ok & (u_acc < acc_ratio), ok
 
 
 # ---------------------------------------------------------------------------
@@ -396,15 +455,24 @@ class JaxCandidateSource:
         # from the remainder of the last round instead of a fresh round each.
         self._buf: Optional[Rows] = None
         self._buf_pos = 0
+        self._res_rej = 0
 
     def is_empty(self) -> bool:
         return self.tree.is_empty()
 
+    def pop_residual_rejects(self) -> int:
+        """Residual (§8.2 cyclic) rejections since the last pop."""
+        n, self._res_rej = self._res_rej, 0
+        return n
+
     def _refill(self) -> int:
         """One device round into the buffer; returns rows banked."""
         self.key, sub = jax.random.split(self.key)
-        rows, ok = self._draw_jit(sub)
-        idx = np.nonzero(np.asarray(ok))[0]
+        rows, ok, walk_ok = self._draw_jit(sub)
+        ok = np.asarray(ok)
+        if self.tree.has_residual:
+            self._res_rej += int(np.asarray(walk_ok).sum() - ok.sum())
+        idx = np.nonzero(ok)[0]
         self._buf = {a: np.asarray(rows[a])[idx].astype(np.int64)
                      for a in self.attrs}
         self._buf_pos = 0
@@ -496,18 +564,40 @@ class JaxBackend(Backend):
             raise ValueError(
                 f"joins must share an output schema; got {sorted(schemas)}")
         self.attrs = list(self.joins[0].output_attrs)
-        self.trees: Dict[str, DeviceTreeJoin] = {
-            j.name: DeviceTreeJoin(cat, j, use_pallas=use_pallas)
-            for j in self.joins}
-        self._sources = {
-            j.name: JaxCandidateSource(self.trees[j.name], seed=seed + i,
-                                       device_batch=device_batch)
-            for i, j in enumerate(self.joins)}
+        # per-join degrade: a join that trips a device limit (packed edge-key
+        # domain over int32, negative dict values) falls back to the host
+        # candidate source instead of failing the whole union; fused rounds
+        # need every piece on device, so they disable when any join degrades
+        self.trees: Dict[str, DeviceTreeJoin] = {}
+        self.degraded: Dict[str, str] = {}          # join name -> reason
+        for j in self.joins:
+            try:
+                self.trees[j.name] = DeviceTreeJoin(cat, j,
+                                                    use_pallas=use_pallas)
+            except ValueError as e:
+                self.degraded[j.name] = str(e)
+        if self.degraded:
+            import warnings
+            warnings.warn(
+                "jax backend: joins "
+                f"{sorted(self.degraded)} fall back to host candidate draws "
+                f"({'; '.join(sorted(set(self.degraded.values())))}); fused "
+                "device rounds are disabled for this union", stacklevel=2)
+        self._sources: Dict[str, object] = {}
+        for i, j in enumerate(self.joins):
+            if j.name in self.trees:
+                self._sources[j.name] = JaxCandidateSource(
+                    self.trees[j.name], seed=seed + i,
+                    device_batch=device_batch)
+            else:
+                from .numpy_backend import NumpyCandidateSource
+                self._sources[j.name] = NumpyCandidateSource(
+                    cat, j, method=join_method)
         # replicated membership indexes are built lazily: the mesh-sharded
         # engine (repro.core.sharding) keeps its own hash-partitioned
         # indexes and must not pay for (or hold) the full replicated ones
         self._members: Optional[Dict[str, DeviceJoinMembership]] = None
-        self._oracle: Optional[JaxMembershipOracle] = None
+        self._oracle = None
 
     @property
     def members(self) -> Dict[str, DeviceJoinMembership]:
@@ -516,16 +606,26 @@ class JaxBackend(Backend):
                              for j in self.joins}
         return self._members
 
-    def source(self, join_name: str) -> JaxCandidateSource:
+    def source(self, join_name: str):
         return self._sources[join_name]
 
-    def oracle(self) -> JaxMembershipOracle:
+    def oracle(self):
         if self._oracle is None:
-            self._oracle = JaxMembershipOracle(self.members, self.attrs)
+            try:
+                self._oracle = JaxMembershipOracle(self.members, self.attrs)
+            except ValueError as e:
+                # same degrade rule as the draw side: out-of-domain values
+                # keep membership on the (128-bit, exact) host prober
+                import warnings
+                warnings.warn(
+                    f"jax backend: device membership unavailable ({e}); "
+                    "probing through the host oracle", stacklevel=2)
+                from ..membership import MembershipProber
+                self._oracle = MembershipProber(self.cat, self.joins)
         return self._oracle
 
     def supports_fused_rounds(self) -> bool:
-        return True
+        return not self.degraded
 
 
 # ---------------------------------------------------------------------------
@@ -543,7 +643,11 @@ class JaxUnionSampler:
        factorisation of the host path's multinomial) and added to the
        shortfall carried from earlier rounds,
     2. **candidate generation for all joins** — one batched EW tree draw per
-       join,
+       join; cyclic pieces verify their residual edges inside the same
+       program (sorted-key probes + ``Π d/M`` acceptance, §8.2), so a
+       residual rejection simply leaves the slot unaccepted and its target
+       flows into the per-piece shortfall carry like any other rejection —
+       round shapes stay static and no piece is ever re-selected,
     3. **cover-membership acceptance** — a candidate of piece ``j`` survives
        iff no earlier cover piece contains it (batched device probes),
     4. **compaction** — accepted candidates sorted to the front per join;
@@ -608,25 +712,28 @@ class JaxUnionSampler:
                                          ).astype(jnp.int32), 0, nj - 1)
         valid = (jnp.arange(batch) < extra_target).astype(jnp.int32)
         need = carry_need + jnp.zeros((nj,), jnp.int32).at[pick].add(valid)
-        # (2)+(3) per join: batched candidate draw + earlier-piece rejection
+        # (2)+(3) per join: batched candidate draw (incl. §8.2 residual-edge
+        # verification for cyclic pieces) + earlier-piece rejection
         out_cols = []
         ok_counts = []
+        res_counts = []
         acc_counts = []
         for j, tree in enumerate(self.trees):
-            rows, ok = tree.draw(jks[j], batch)
-            acc = ok
+            rows, acc, walk_ok = tree.draw(jks[j], batch)
+            res_counts.append(jnp.sum(walk_ok) - jnp.sum(acc))
             for q in range(j):             # pieces earlier in cover order
                 acc = acc & ~members[q].contains(rows)
             # (4) compaction: accepted candidates first, original slot order
             perm = jnp.argsort(~acc)
             out_cols.append(tuple(rows[a][perm] for a in self.attrs))
-            ok_counts.append(jnp.sum(ok))
+            ok_counts.append(jnp.sum(walk_ok))
             acc_counts.append(jnp.sum(acc))
         ok_counts = jnp.stack(ok_counts).astype(jnp.int32)
+        res_counts = jnp.stack(res_counts).astype(jnp.int32)
         acc_counts = jnp.stack(acc_counts).astype(jnp.int32)
         take = jnp.minimum(need, acc_counts)
         shortfall = need - take
-        return out_cols, ok_counts, acc_counts, take, shortfall
+        return out_cols, ok_counts, res_counts, acc_counts, take, shortfall
 
     # -- host top-up loop -----------------------------------------------------
     def _drain_bank(self, j: int, want: int, parts, homes) -> int:
@@ -686,19 +793,24 @@ class JaxUnionSampler:
             unassigned = n - total - int(owed.sum())
             extra = max(0, min(unassigned, self.round_batch))
             self.key, sub = jax.random.split(self.key)
-            out_cols, ok_counts, acc_counts, take, shortfall = self._round_jit(
+            (out_cols, ok_counts, res_counts, acc_counts, take,
+             shortfall) = self._round_jit(
                 jnp.asarray(np.cumsum(p), jnp.float32),
                 jnp.asarray(np.minimum(owed, np.iinfo(np.int32).max),
                             jnp.int32),
                 jnp.int32(extra), sub)
             ok_counts = np.asarray(ok_counts)
+            res_counts = np.asarray(res_counts)
             acc_counts = np.asarray(acc_counts)
             take = np.asarray(take)
             shortfall = np.asarray(shortfall)
             self.stats.iterations += self.round_batch * nj
             self.stats.candidate_draws += self.round_batch * nj
-            # membership rejections only (dead walks are not cover rejects)
-            self.stats.cover_rejects += int(ok_counts.sum() - acc_counts.sum())
+            # residual (§8.2) and membership rejections are accounted
+            # separately (dead walks are neither)
+            self.stats.residual_rejects += int(res_counts.sum())
+            self.stats.cover_rejects += int(ok_counts.sum() - res_counts.sum()
+                                            - acc_counts.sum())
             for j in range(nj):
                 t = int(take[j])
                 a_j = int(acc_counts[j])

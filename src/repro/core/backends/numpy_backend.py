@@ -32,12 +32,19 @@ class NumpyCandidateSource:
     def __init__(self, cat: Catalog, spec: JoinSpec, method: str = "ew"):
         self.join_name = spec.name
         self.sampler = JoinSampler(cat, spec, method=method)
+        self._rej_seen = 0
 
     def draw(self, rng: np.random.Generator, count: int,
              batch: Optional[int] = None) -> Tuple[Rows, int]:
         if batch is None:
             batch = max(count, 64)
         return self.sampler.sample_uniform(rng, count, batch=batch)
+
+    def pop_residual_rejects(self) -> int:
+        """Residual (§8.2 cyclic) rejections since the last pop."""
+        cur = self.sampler.residual_rejects
+        d, self._rej_seen = cur - self._rej_seen, cur
+        return d
 
     def is_empty(self) -> bool:
         return self.sampler.is_empty()

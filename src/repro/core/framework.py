@@ -6,6 +6,13 @@ Theorem 3 (union size, Eq. 1 diagnostics) and the cover sizes of Algorithm 1:
 * ``exact``        — FULLJOIN ground truth (tests / small data only),
 * ``histogram``    — §5 degree-statistics bounds (decentralised setting),
 * ``random_walk``  — §6 wander-join estimates (centralised setting).
+
+All three handle cyclic (§8.2 skeleton+residual) members: ``exact`` counts
+distinct tuples of the materialised join, the histogram algebra treats
+residual edges as links to their earlier relations, and wander-join walks
+hop residual edges like any other — so every warm-up method feeds covers
+over unions that mix acyclic and cyclic joins, on either estimation
+backend.
 """
 
 from __future__ import annotations

@@ -36,9 +36,12 @@ class JaxChainSampler:
 
     def __init__(self, cat: Catalog, spec: JoinSpec, seed: int = 0):
         if spec.is_cyclic or not spec.is_chain:
-            raise ValueError("device sampler: chain joins only (use the tree "
-                             "engine in repro.core.backends.jax_backend for "
-                             "acyclic non-chain joins)")
+            shape = "cyclic" if spec.is_cyclic else "non-chain acyclic"
+            raise ValueError(
+                f"JaxChainSampler: join {spec.name!r} is {shape}; this facade "
+                "is chain-only — DeviceTreeJoin in "
+                "repro.core.backends.jax_backend runs acyclic and cyclic "
+                "(§8.2 skeleton+residual) joins on device")
         self.spec = spec
         self.tree = DeviceTreeJoin(cat, spec)
         self.attrs = tuple(spec.output_attrs)
@@ -55,7 +58,7 @@ class JaxChainSampler:
 
     def sample_batch(self, batch: int) -> Tuple[Dict[str, np.ndarray], np.ndarray]:
         self.key, sub = jax.random.split(self.key)
-        rows, ok = self._draw_fn(batch)(sub)
+        rows, ok, _ = self._draw_fn(batch)(sub)   # chains: accept == walk_ok
         return ({a: np.asarray(rows[a]).astype(np.int64) for a in self.attrs},
                 np.asarray(ok))
 

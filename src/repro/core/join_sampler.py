@@ -78,6 +78,9 @@ class JoinSampler:
         self.spec = spec
         self.method = method
         self.reduce = reduce if reduce is not None else ("backward" if method == "eo" else "none")
+        # cumulative §8.2 residual rejections (ew on cyclic joins only —
+        # under eo the d/M test blends tree and residual factors)
+        self.residual_rejects = 0
         self._prepare()
 
     # ------------------------------------------------------------------ prep
@@ -246,6 +249,8 @@ class JoinSampler:
         else:
             u = rng.random(B)
             accept = ok & (u < accept_ratio)
+            if self.method == "ew" and self.spec.is_cyclic:
+                self.residual_rejects += int((ok & ~accept).sum())
         return SampleBatch(rows=rows, ok=ok, accept=accept, prob=np.where(ok, prob, 0.0), draws=B)
 
     def _empty_batch(self, B: int) -> SampleBatch:

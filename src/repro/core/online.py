@@ -47,7 +47,7 @@ from .koverlap import OverlapOracle
 from .membership import rows_subset
 from .relation import fingerprint128
 from .size_estimation import olken_bound
-from .union_sampler import SampleSet, SamplerStats
+from .union_sampler import SampleSet, SamplerStats, pop_residual_rejects
 
 Rows = Dict[str, np.ndarray]
 
@@ -278,6 +278,8 @@ class OnlineUnionSampler:
                     except EmptyJoinError:
                         break
                     self.stats.candidate_draws += draws
+                    self.stats.residual_rejects += pop_residual_rejects(
+                        self.sources[name])
                     self._since_refresh += 1
                     if bool(self._cover_accept(oidx, rows)[0]):
                         accepted = rows

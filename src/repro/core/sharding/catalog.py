@@ -25,7 +25,12 @@ union's relations across a 1-axis :class:`jax.sharding.Mesh`:
   only fingerprints with ``fp1 % world == s``.  A membership probe is
   resolved by the owner, which is why the sampler's round needs exactly one
   all-gather + one reduce-scatter exchange (see
-  :class:`~repro.core.sharding.sampler.ShardedUnionSampler`).
+  :class:`~repro.core.sharding.sampler.ShardedUnionSampler`).  Residual
+  (§8.2 cycle-closing) relations of cyclic joins are base relations like
+  any other here, so their fingerprints ride the same exchange; the
+  residual *draw* state (sorted composite-key indexes) is replicated
+  non-root node state of the underlying :class:`DeviceTreeJoin`, like every
+  child index.
 
 With ``world == 1`` every per-shard structure degenerates to the PR-1 device
 engine's arrays bit for bit — the acceptance bar the equivalence tests pin.

@@ -12,13 +12,19 @@ device mesh.  One round, per shard:
    tree candidates per join from the *whole* join under its own fold-in key
    (replicated roots — see
    :class:`~repro.core.sharding.catalog.ShardedTreeJoin` for why root-range
-   pieces would bias fixed-shape consumption),
+   pieces would bias fixed-shape consumption); cyclic joins run the §8.2
+   skeleton draw + residual-edge verification entirely inside this local
+   step (residual sorted-key indexes are replicated non-root node state,
+   like every other child index),
 3. **one fingerprint exchange** — earlier-piece membership probes are
    resolved by hash-partition ownership: all shards ``all_gather`` the
    candidates' per-relation fingerprints, the owner shard answers each
    probe against its local sorted index, and one ``psum_scatter``
    (reduce-scatter) ORs the owner verdicts and hands each shard exactly its
-   own candidates' segment (the only collectives in the round),
+   own candidates' segment (the only collectives in the round).  Residual
+   relations are ordinary base relations of their join, so their row
+   fingerprints are hash-partitioned and ride this same exchange — cyclic
+   cover pieces add **zero** extra collectives,
 4. **local compaction** — accepted candidates are sorted to the front per
    shard; per-shard accepted counts return to the host, which merges
    shortfall/surplus banking exactly as the unsharded engine does (the
@@ -106,18 +112,22 @@ class ShardedUnionSampler(JaxUnionSampler):
             need = carry_need + jnp.zeros((nj,), jnp.int32).at[pick].add(valid)
 
             # (2) local i.i.d. whole-join draws (replicated roots, per-shard
-            # fold-in keys — see ShardedTreeJoin for why ranges would bias)
-            rows_j, ok_j = [], []
+            # fold-in keys — see ShardedTreeJoin for why ranges would bias).
+            # Residual (§8.2) edges resolve here too: their sorted-key
+            # indexes are replicated non-root node state, so cyclic pieces
+            # verify locally with zero extra communication.
+            rows_j, ok_j, wok_j = [], [], []
             for j in range(nj):
                 rst = st["roots"][j]
                 prefix = rst["prefix"][0]
                 cols = {a: c[0] for a, c in rst["cols"].items()}
                 kd = (jks[j] if world == 1          # bit-for-bit unsharded
                       else jax.random.fold_in(jks[j], sid))
-                rows, ok = dtrees[j].draw_with_root(kd, B, prefix, cols,
-                                                    rst["n_root"][0])
+                rows, ok, wok = dtrees[j].draw_with_root(kd, B, prefix, cols,
+                                                         rst["n_root"][0])
                 rows_j.append(rows)
                 ok_j.append(ok)
+                wok_j.append(wok)
 
             # (3) one fingerprint exchange answers every earlier-piece probe
             def window_probe(s1, s2, n_own, qq1, qq2, kmax):
@@ -171,10 +181,11 @@ class ShardedUnionSampler(JaxUnionSampler):
                     jnp.stack(hits), axis, scatter_dimension=1, tiled=True)]
 
             # (4) local acceptance + compaction
-            out_cols, okc, accc = [], [], []
+            out_cols, okc, resc, accc = [], [], [], []
             p = 0
             for j in range(nj):
                 acc = ok_j[j]
+                resc.append(jnp.sum(wok_j[j]) - jnp.sum(acc))
                 for q in range(j):
                     contained = jnp.ones((B,), bool)
                     for _ in range(len(self.smems[q].rels)):
@@ -184,11 +195,12 @@ class ShardedUnionSampler(JaxUnionSampler):
                 perm = jnp.argsort(~acc)
                 out_cols.append(tuple(rows_j[j][a][perm][None]
                                       for a in out_attrs))
-                okc.append(jnp.sum(ok_j[j]))
+                okc.append(jnp.sum(wok_j[j]))
                 accc.append(jnp.sum(acc))
             okc = jnp.stack(okc).astype(jnp.int32)[None]
+            resc = jnp.stack(resc).astype(jnp.int32)[None]
             accc = jnp.stack(accc).astype(jnp.int32)[None]
-            return need[None], okc, accc, out_cols
+            return need[None], okc, resc, accc, out_cols
 
         return jax.jit(shard_map(
             round_fn, mesh=mesh,
@@ -203,10 +215,11 @@ class ShardedUnionSampler(JaxUnionSampler):
         host loop reads ``[:take]`` and banks ``[take:accepted]``); per-shard
         counts merge by summation — the shortfall/surplus algebra is global.
         """
-        need, okc, accc, out_cols = self._round_prog(
+        need, okc, resc, accc, out_cols = self._round_prog(
             probs_cum, carry_need, extra_target, key, self._state)
         need = np.asarray(need)[0].astype(np.int64)
         ok_counts = np.asarray(okc).sum(axis=0)
+        res_counts = np.asarray(resc).sum(axis=0)
         acc_ps = np.asarray(accc)                   # (world, nj)
         acc_counts = acc_ps.sum(axis=0)
         take = np.minimum(need, acc_counts)
@@ -223,4 +236,4 @@ class ShardedUnionSampler(JaxUnionSampler):
                         [c[s, :acc_ps[s, j]] for s in range(self.world)])
                         if acc_counts[j] else c[0, :0])
                 cols.append(tuple(per_attr))
-        return cols, ok_counts, acc_counts, take, shortfall
+        return cols, ok_counts, res_counts, acc_counts, take, shortfall

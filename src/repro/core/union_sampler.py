@@ -59,6 +59,7 @@ class SamplerStats:
     iterations: int = 0
     candidate_draws: int = 0       # ψ of §3.3 (samples obtained from join subroutine)
     cover_rejects: int = 0
+    residual_rejects: int = 0      # §8.2 cyclic: walks killed by the Π d/M test
     canonical_rejects: int = 0
     revisions: int = 0
     dropped_slots: int = 0
@@ -106,6 +107,13 @@ def _fp_to_int(fp_row: np.ndarray) -> int:
     return (int(fp_row[0]) << 64) | int(fp_row[1])
 
 
+def pop_residual_rejects(source) -> int:
+    """Drain a candidate source's §8.2 residual-rejection counter (0 when the
+    source has none — acyclic joins, custom backends)."""
+    pop = getattr(source, "pop_residual_rejects", None)
+    return int(pop()) if pop is not None else 0
+
+
 def empty_sample_set(attrs: Sequence[str], stats: SamplerStats) -> SampleSet:
     rows = {a: np.zeros(0, dtype=np.int64) for a in attrs}
     fp = fingerprint128([rows[a] for a in sorted(attrs)])
@@ -146,6 +154,7 @@ class DisjointUnionSampler:
                 continue
             rows, draws = self.sources[j].draw(self.rng, c, batch=1024)
             self.stats.candidate_draws += draws
+            self.stats.residual_rejects += pop_residual_rejects(self.sources[j])
             parts.append(rows)
             homes.append(np.full(c, j, dtype=np.int64))
         rows = rows_concat(parts)
@@ -196,6 +205,8 @@ class BernoulliUnionSampler:
                     continue
                 rows, draws = self.sources[j].draw(self.rng, c, batch=1024)
                 self.stats.candidate_draws += draws
+                self.stats.residual_rejects += pop_residual_rejects(
+                    self.sources[j])
                 # canonical acceptance: no earlier-indexed join contains the tuple
                 keep = np.ones(c, dtype=bool)
                 for i in range(j):
@@ -303,6 +314,7 @@ class SetUnionSampler:
             # treat the slots as dropped (estimation noise, logged)
             return None
         self.stats.candidate_draws += draws
+        self.stats.residual_rejects += pop_residual_rejects(self.sources[name])
         return rows
 
     def _cover_accept_probe(self, oidx: int, rows: Rows) -> np.ndarray:

@@ -33,6 +33,11 @@ NEG_INF = -1e30
 # ---------------------------------------------------------------------------
 
 
+
+def _ambient_mesh():
+    from ..launch.mesh import ambient_mesh
+    return ambient_mesh()
+
 def shard_activations(x: jnp.ndarray, seq_axis: int = 1) -> jnp.ndarray:
     """Constrain (B, S, d) activations to batch→(pod,data), seq→model.
 
@@ -43,11 +48,8 @@ def shard_activations(x: jnp.ndarray, seq_axis: int = 1) -> jnp.ndarray:
     EXPERIMENTS.md §Perf).  No-op when tracing without an ambient mesh
     (smoke tests) or when dims don't divide.
     """
-    try:
-        am = jax.sharding.get_abstract_mesh()
-    except Exception:
-        return x
-    if am is None or not getattr(am, "axis_names", ()):  # no mesh: no-op
+    am = _ambient_mesh()
+    if am is None:
         return x
     axes = am.axis_names
     da = tuple(a for a in ("pod", "data") if a in axes)
@@ -67,11 +69,8 @@ def shard_activations(x: jnp.ndarray, seq_axis: int = 1) -> jnp.ndarray:
 
 def shard_logits(x: jnp.ndarray) -> jnp.ndarray:
     """(T, V) or (B, C, V) logits: batch→(pod,data), vocab→model."""
-    try:
-        am = jax.sharding.get_abstract_mesh()
-    except Exception:
-        return x
-    if am is None or not getattr(am, "axis_names", ()):
+    am = _ambient_mesh()
+    if am is None:
         return x
     axes = am.axis_names
     da = tuple(a for a in ("pod", "data") if a in axes)

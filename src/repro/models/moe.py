@@ -31,11 +31,8 @@ def _pspec(*parts):
 
 def _constrain(x: jnp.ndarray, parts) -> jnp.ndarray:
     """Best-effort sharding constraint (no-op without an ambient mesh)."""
-    try:
-        am = jax.sharding.get_abstract_mesh()
-    except Exception:
-        return x
-    if am is None or not getattr(am, "axis_names", ()):
+    am = _ambient_mesh()
+    if am is None:
         return x
     axes = am.axis_names
     fixed = []
@@ -136,13 +133,8 @@ def moe_ffn(params: Dict[str, jnp.ndarray], x: jnp.ndarray, dims: MoEDims,
 
 
 def _ambient_mesh():
-    try:
-        am = jax.sharding.get_abstract_mesh()
-    except Exception:
-        return None
-    if am is None or not getattr(am, "axis_names", ()):
-        return None
-    return am
+    from ..launch.mesh import ambient_mesh
+    return ambient_mesh()
 
 
 def moe_ffn_dist(params: Dict[str, jnp.ndarray], x: jnp.ndarray,
@@ -201,7 +193,8 @@ def moe_ffn_dist(params: Dict[str, jnp.ndarray], x: jnp.ndarray,
             aux = jax.lax.pmean(aux, da)   # model axis is already invariant
         return out.reshape(xb.shape), aux
 
-    fn = jax.shard_map(
+    from ..launch.mesh import shard_map
+    fn = shard_map(
         block, mesh=am,
         in_specs=(P(da_spec, None, None), P(None, None),
                   P("model", None, None), P("model", None, None),

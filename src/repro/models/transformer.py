@@ -112,6 +112,11 @@ class ModelConfig:
 # ---------------------------------------------------------------------------
 
 
+
+def _ambient_mesh():
+    from ..launch.mesh import ambient_mesh
+    return ambient_mesh()
+
 def _attn_shapes(cfg: ModelConfig) -> Dict[str, Tuple[Tuple[int, ...], Tuple[str, ...]]]:
     d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     return {
@@ -260,11 +265,8 @@ def _sub(params: Dict[str, jnp.ndarray], prefix: str) -> Dict[str, jnp.ndarray]:
 
 def _constrain_heads(x: jnp.ndarray) -> jnp.ndarray:
     """(B, S, H, D) attention activations: batch->data, heads->model."""
-    try:
-        am = jax.sharding.get_abstract_mesh()
-    except Exception:
-        return x
-    if am is None or not getattr(am, "axis_names", ()):
+    am = _ambient_mesh()
+    if am is None:
         return x
     axes = am.axis_names
     da = tuple(a for a in ("pod", "data") if a in axes)
@@ -497,11 +499,8 @@ def forward_hidden(params: Dict[str, jnp.ndarray], cfg: ModelConfig,
 def _constrain_chunk_stack(xc: jnp.ndarray) -> jnp.ndarray:
     """(nc, B, C, d) loss-chunk stack: pin batch(axis 1)->data so the
     backward's dxc never materialises batch-replicated (§Perf iter 2)."""
-    try:
-        am = jax.sharding.get_abstract_mesh()
-    except Exception:
-        return xc
-    if am is None or not getattr(am, "axis_names", ()):
+    am = _ambient_mesh()
+    if am is None:
         return xc
     axes = am.axis_names
     da = tuple(a for a in ("pod", "data") if a in axes)

@@ -22,7 +22,7 @@ from repro.core.index import Catalog
 from repro.core.joins import JoinNode, JoinSpec, chain_join, full_join_matrix
 from repro.core.overlap import exact_union_size
 from repro.core.union_sampler import SetUnionSampler
-from repro.data.workloads import uq1, uq2, uq3
+from repro.data.workloads import uq1, uq2, uq3, uq4
 
 
 def _tree_spec(seed=0):
@@ -114,9 +114,10 @@ def test_pallas_probe_path_matches_jnp():
     t_jnp = DeviceTreeJoin(cat, spec, use_pallas=False)
     t_pal = DeviceTreeJoin(cat, spec, use_pallas=True)
     key = jax.random.PRNGKey(0)
-    r1, ok1 = jax.jit(lambda k: t_jnp.draw(k, 256))(key)
-    r2, ok2 = jax.jit(lambda k: t_pal.draw(k, 256))(key)
+    r1, ok1, wok1 = jax.jit(lambda k: t_jnp.draw(k, 256))(key)
+    r2, ok2, wok2 = jax.jit(lambda k: t_pal.draw(k, 256))(key)
     assert np.array_equal(np.asarray(ok1), np.asarray(ok2))
+    assert np.array_equal(np.asarray(wok1), np.asarray(wok2))
     for a in spec.output_attrs:
         assert np.array_equal(np.asarray(r1[a]), np.asarray(r2[a])), a
 
@@ -172,7 +173,8 @@ def test_device_membership_fp_duplicate_window():
     (uq1, dict(scale=0.05, overlap=0.5, seed=1, n_joins=2)),   # chains
     (uq2, dict(scale=0.02, seed=0)),                           # high overlap
     (uq3, dict(scale=0.01, overlap=0.3, seed=0)),              # tree join
-], ids=["uq1-chains", "uq2-overlap", "uq3-tree"])
+    (uq4, dict(scale=0.02, seed=0)),                           # cyclic (§8.2)
+], ids=["uq1-chains", "uq2-overlap", "uq3-tree", "uq4-cyclic"])
 def test_set_union_jax_uniform(wl_fn, kw):
     wl = wl_fn(**kw)
     wr = warmup(wl.cat, wl.joins, method="exact")
@@ -222,11 +224,53 @@ def test_jax_backend_rejects_unsupported_modes():
         JaxBackend(wl.cat, wl.joins, join_method="eo")
 
 
-def test_jax_backend_rejects_cyclic():
-    from repro.data.workloads import uq4
+def test_jax_backend_runs_cyclic():
+    """Cyclic joins build and draw on device (§8.2 skeleton+residual)."""
     wl = uq4(scale=0.02, seed=0)
-    with pytest.raises(ValueError, match="cyclic"):
-        JaxBackend(wl.cat, wl.joins)
+    be = JaxBackend(wl.cat, wl.joins)
+    assert be.supports_fused_rounds() and not be.degraded
+    src = be.source("UQ4_CYC")
+    assert src.tree.has_residual and not src.is_empty()
+    rows, draws = src.draw(np.random.default_rng(0), 500)
+    assert draws >= 500
+    # every drawn tuple is a member of the cyclic join (host 128-bit oracle)
+    host = NumpyBackend(wl.cat, wl.joins).oracle()
+    assert host.contains("UQ4_CYC", rows).all()
+    # device membership matrix equals the host's on cyclic joins too
+    dev = be.oracle()
+    names = [j.name for j in wl.joins]
+    assert np.array_equal(host.membership_matrix(rows, names),
+                          dev.membership_matrix(rows, names))
+
+
+def test_mixed_union_degrades_per_join():
+    """A union where ONE join trips a device limit degrades that join to the
+    host source (one warning) instead of raising for the whole union."""
+    from repro.core.relation import Relation
+    rng = np.random.default_rng(0)
+    big = 1 << 31                            # outside the int32 device domain
+    R1 = Relation("R1", {"a": rng.integers(0, 8, 50),
+                         "b": rng.integers(0, 8, 50)})
+    R2 = Relation("R2", {"a": np.concatenate([rng.integers(0, 8, 49),
+                                              np.asarray([big])]),
+                         "b": rng.integers(0, 8, 50)})
+    j_ok = chain_join("J_OK", [R1], [])
+    j_bad = chain_join("J_BAD", [R2], [])
+    cat = Catalog()
+    with pytest.warns(UserWarning, match="fall back to host"):
+        be = JaxBackend(cat, [j_ok, j_bad])
+    assert not be.supports_fused_rounds()
+    assert set(be.degraded) == {"J_BAD"}
+    assert "J_OK" in be.trees                # device-eligible join stays on it
+    # both sources still draw; the sampler runs on the host loop
+    from repro.core.cover import Cover
+    cover = Cover(["J_OK", "J_BAD"], {"J_OK": 50.0, "J_BAD": 50.0},
+                  {"J_OK": 50.0, "J_BAD": 50.0})
+    with pytest.warns(UserWarning, match="host oracle"):
+        s = SetUnionSampler(cat, [j_ok, j_bad], cover, seed=3, backend=be)
+        ss = s.sample(300)
+    assert len(ss) == 300
+    assert s._engine is None                 # fused rounds disabled
 
 
 def test_online_union_jax_backend_smoke():

@@ -25,9 +25,9 @@ def _run(code: str, timeout=900):
 def test_dryrun_single_cell_compiles_and_reports():
     out = _run(r"""
 from repro.launch import dryrun
+from repro.launch.mesh import make_mesh
 import jax, json
-mesh = jax.make_mesh((4, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_mesh((4, 4), ("data", "model"))
 res = dryrun.lower_cell("mamba2-780m", "decode_32k", mesh)
 r = res["roofline"]
 assert res["compile_s"] > 0
@@ -61,7 +61,8 @@ batch = {"tokens": jax.ShapeDtypeStruct((2, 64), jnp.int32),
 co = jax.jit(lambda p, b: forward_train(p, cfg, b)).lower(
     param_specs(cfg), batch).compile()
 cs = census(co.as_text())
-raw = float((co.cost_analysis() or {}).get("flops", 0.0))
+from repro.launch.mesh import cost_analysis_dict
+raw = float(cost_analysis_dict(co).get("flops", 0.0))
 assert cs.flops > 0 and raw > 0
 ratio = cs.flops / raw
 assert 0.4 < ratio < 2.0, (cs.flops, raw)

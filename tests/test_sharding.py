@@ -309,6 +309,40 @@ print("OK")
     assert "OK" in out
 
 
+def test_multi_shard_cyclic_union_uniform():
+    """UQ4's cyclic piece under a 4-shard mesh: residual verification stays
+    local (replicated node indexes), cover membership rides the one
+    fingerprint exchange, and the union stream stays exactly uniform."""
+    out = _run_sub(r"""
+import numpy as np
+from scipy import stats as sps
+from repro.core.framework import estimate_union, warmup
+from repro.core.overlap import exact_union_size
+from repro.core.sharding import make_sampler_mesh
+from repro.core.union_sampler import SetUnionSampler
+from repro.data.workloads import uq4
+
+wl = uq4(scale=0.02, seed=0)
+est = estimate_union(warmup(wl.cat, wl.joins, method="exact").oracle)
+U = exact_union_size(wl.cat, wl.joins)
+mesh = make_sampler_mesh(world=4)
+s = SetUnionSampler(wl.cat, wl.joins, est.cover, seed=11, backend="jax",
+                    round_batch=512, mesh=mesh)
+N = 120 * U
+ss = s.sample(N)
+assert len(ss) == N
+m = ss.matrix()
+uni, counts = np.unique(m.view([("", m.dtype)] * m.shape[1]).ravel(),
+                        return_counts=True)
+exp = N / U
+chi2 = float(((counts - exp) ** 2 / exp).sum()) + (U - uni.shape[0]) * exp
+p = 1 - sps.chi2.cdf(chi2, df=U - 1)
+assert p > 1e-3, p
+print("OK")
+""", devices=4, timeout=900)
+    assert "OK" in out
+
+
 # ---------------------------------------------------------------------------
 # serve queue
 # ---------------------------------------------------------------------------
