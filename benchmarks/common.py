@@ -1,16 +1,23 @@
-"""Shared benchmark utilities: timing + CSV row emission.
+"""Shared benchmark utilities: timing, CSV row emission, JSON trajectories.
 
 Every benchmark module reproduces one paper figure/table (DESIGN.md §9) and
-emits ``name,us_per_call,derived`` CSV rows via :func:`emit`.
+emits ``name,us_per_call,derived`` CSV rows via :func:`emit`.  Modules that
+feed the perf trajectory additionally call :func:`record` with structured
+fields (samples/s, rounds, psi, ...) and the driver persists them with
+:func:`write_json` — the ``BENCH_*.json`` files the ROADMAP tracks.
 """
 
 from __future__ import annotations
 
+import json
+import os
+import subprocess
 import sys
 import time
-from typing import Callable, Optional
+from typing import Callable, Dict, List, Optional
 
 ROWS = []
+RECORDS: List[Dict] = []
 
 
 def timed(fn: Callable, repeats: int = 1) -> float:
@@ -28,3 +35,52 @@ def emit(name: str, us_per_call: float, derived: str = "") -> None:
 
 def header() -> None:
     print("name,us_per_call,derived", flush=True)
+
+
+# ------------------------------------------------------------- JSON writer
+def record(name: str, **fields) -> None:
+    """Append one structured benchmark record for the JSON trajectory."""
+    RECORDS.append({"name": name, **fields})
+
+
+def git_sha() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+            timeout=10).stdout.strip() or "unknown"
+    except Exception:
+        return "unknown"
+
+
+def bench_meta() -> Dict:
+    """Environment stamp shared by every BENCH_*.json file."""
+    meta: Dict = {
+        "git_sha": git_sha(),
+        "python": sys.version.split()[0],
+        "cpu_count": os.cpu_count(),
+    }
+    try:
+        import jax
+        meta["jax_version"] = jax.__version__
+        meta["device_count"] = jax.device_count()
+        meta["platform"] = jax.devices()[0].platform
+    except Exception:
+        meta["jax_version"] = None
+        meta["device_count"] = 0
+    return meta
+
+
+def write_json(path: Optional[str], records: Optional[List[Dict]] = None,
+               **extra_meta) -> None:
+    """Persist ``records`` (default: the global RECORDS) plus meta to PATH."""
+    if not path:
+        return
+    payload = {
+        "meta": {**bench_meta(), **extra_meta},
+        "records": list(RECORDS if records is None else records),
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {path} ({len(payload['records'])} records)", flush=True)

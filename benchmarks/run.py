@@ -1,7 +1,9 @@
 """Benchmark orchestrator — one module per paper figure (DESIGN.md §9).
 
 Prints ``name,us_per_call,derived`` CSV rows.  ``--full`` uses the paper-scale
-settings (minutes); default is the quick functional pass.
+settings (minutes); default is the quick functional pass.  ``--json PATH``
+additionally persists every structured :func:`benchmarks.common.record` row
+(plus git sha / device count meta) as one JSON trajectory file.
 """
 
 from __future__ import annotations
@@ -15,7 +17,7 @@ from . import (bias_ablation, breakdown, data_scale, device_sampler,
                estimation_device, estimation_error, estimation_runtime,
                kernels_bench, reuse, roofline, sampling_scaling,
                sharded_scaling, union_engine)
-from .common import emit, header
+from .common import emit, header, write_json
 
 MODULES = [
     ("estimation_error", estimation_error),     # Fig 4a/4b + 5a
@@ -38,6 +40,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write structured records as a JSON trajectory")
     args = ap.parse_args()
     header()
     t0 = time.time()
@@ -56,6 +60,7 @@ def main() -> None:
                  f"FAILED:{type(e).__name__}")
     emit("_total", (time.time() - t0) * 1e6,
          f"failures={failures}")
+    write_json(args.json, full=args.full)
     if failures:
         sys.exit(1)
 

@@ -43,8 +43,9 @@ def _sweep(args) -> int:
     from repro.core.sharding import make_sampler_mesh
     from repro.core.union_sampler import SetUnionSampler
     from repro.data.workloads import uq1
+    from repro.serve.service import SampleService
 
-    from benchmarks.common import emit
+    from benchmarks.common import emit, record, write_json
 
     import jax
     ndev = len(jax.devices())
@@ -54,20 +55,49 @@ def _sweep(args) -> int:
 
     worlds = [w for w in (1, 2, 4, 8, 16) if w <= ndev]
     rates = {}
+    last = None
     for world in worlds:
         mesh = make_sampler_mesh(world=world)
         s = SetUnionSampler(wl.cat, wl.joins, est.cover, seed=7,
                             backend="jax", round_batch=args.round_batch,
                             mesh=mesh)
         s.sample(args.warm)                  # compile + warm the banks
+        s.sample(args.samples)               # compile the n-capacity loop
+        bt = sum(getattr(s._engine, "piece_batches", None)
+                 or [args.round_batch * world])
+        it0, cd0 = s.stats.iterations, s.stats.candidate_draws
         t0 = time.perf_counter()
         s.sample(args.samples)
         dt = time.perf_counter() - t0
         rate = args.samples / max(dt, 1e-9)
         rates[world] = rate
+        last = s
         emit(f"sharded_union_w{world}", dt / args.samples * 1e6,
              f"{rate:,.0f} samples/s ({world} shards, "
              f"per-shard round_batch={args.round_batch})")
+        record(f"sharded_union_w{world}", world=world,
+               round_batch=args.round_batch, n=args.samples, seconds=dt,
+               samples_per_s=rate,
+               rounds=(s.stats.iterations - it0) // max(bt, 1),
+               psi=(s.stats.candidate_draws - cd0) / args.samples)
+
+    # pipelined serving path: dispatch-then-drain double buffering hides the
+    # host-side batch assembly behind the next round's device compute
+    if last is not None:
+        world = worlds[-1]
+        with SampleService(last, batch=max(args.round_batch, 4096),
+                           prefetch=2) as svc:
+            svc.request(args.warm)           # producer warm + queue primed
+            t0 = time.perf_counter()
+            svc.request(args.samples)
+            dt = time.perf_counter() - t0
+        rate = args.samples / max(dt, 1e-9)
+        emit(f"serve_pipelined_w{world}", dt / args.samples * 1e6,
+             f"{rate:,.0f} samples/s through SampleService "
+             f"(async double-buffered rounds, {world} shards)")
+        record(f"serve_pipelined_w{world}", world=world,
+               round_batch=args.round_batch, n=args.samples, seconds=dt,
+               samples_per_s=rate, pipelined=True)
     if len(worlds) > 1:
         speedup = rates[worlds[-1]] / max(rates[1], 1e-9)
         cores = os.cpu_count() or 1
@@ -79,6 +109,7 @@ def _sweep(args) -> int:
             print(f"FAIL: speedup {speedup:.2f}x < required "
                   f"{args.require_speedup}x", flush=True)
             return 1
+    write_json(args.json, bench="sharded_scaling", scale=args.scale)
     return 0
 
 
@@ -113,6 +144,8 @@ def _parse(argv=None):
     ap.add_argument("--round-batch", type=int, default=None)
     ap.add_argument("--require-speedup", type=float, default=0.0,
                     help="exit non-zero when 1->K speedup is below this")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write structured results (BENCH_serve.json)")
     args = ap.parse_args(argv)
     if args.scale is None:
         args.scale = 0.05 if args.smoke else 0.2

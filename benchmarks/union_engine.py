@@ -1,68 +1,195 @@
-"""Union-engine benchmark: fused device rounds across workload shapes.
+"""Union-engine benchmark: persistent device loop vs host-driven rounds.
 
-Sweeps the backend-abstracted ``SetUnionSampler`` over union workloads
-(chain-only UQ1, tree-shaped UQ3, cyclic UQ4) and round-batch sizes, reporting
-samples/sec for the host engine vs the fused jitted engine plus the
-device engine's accounting (candidate draws per emitted sample).  The
-device path runs one jitted program per Algorithm-1 round — multinomial
-cover selection, candidate generation for all joins, membership masks,
-compaction — so its per-sample cost is flat in ``n``.
+The headline comparison is the one the ROADMAP's perf trajectory tracks:
+``fused_rounds="device"`` (the whole multi-round Algorithm-1 loop inside one
+jitted ``lax.while_loop`` — one device→host sync per ``sample(n)``) against
+``fused_rounds="host"`` (the PR-4 host-driven round loop: one jitted round
+per dispatch, ``np.asarray`` fetch + Python banking between rounds — O(rounds)
+syncs) on the UQ1 2-join union, swept over round-batch sizes.  The host loop
+degrades as the round batch shrinks (more rounds → more syncs) while the
+device loop is flat, which is exactly the O(rounds)→O(1) sync story.
+
+Secondary rows cover the numpy reference engine and the other union shapes
+(5-join chain, tree, cyclic).  Structured results land in ``BENCH_union.json``
+via ``--json`` (samples/s, rounds, psi, device count, git sha).
+
+Timing protocol: every engine is warmed with a full-size ``sample(n)`` first —
+the device loop compiles one program per output-capacity class, so a small
+warm-up call would leave the big capacity's compile inside the timed region —
+then the best of ``--repeats`` timed calls is reported (single-core containers
+are noisy).
+
+    PYTHONPATH=src python -m benchmarks.union_engine --smoke --json BENCH_union.json
 """
 
 from __future__ import annotations
 
+import argparse
+import sys
 import time
 
 from repro.core.framework import estimate_union, warmup
 from repro.core.union_sampler import SetUnionSampler
 from repro.data.workloads import uq1, uq3, uq4
 
-from .common import emit
+from .common import emit, record, write_json
+
+# round-batch sweep for the headline host-vs-device comparison
+_RB_SWEEP = (256, 512, 1024, 4096)
 
 
-def _bench_one(tag: str, wl, n: int, round_batch: int) -> None:
-    wr = warmup(wl.cat, wl.joins, method="exact")
-    est = estimate_union(wr.oracle)
+def _measure(sampler, n: int, repeats: int, rb: int) -> dict:
+    """Warm (compile + banks) then best-of-``repeats`` steady-state timing."""
+    sampler.sample(n)                        # compiles the n-capacity program
+    # iterations advance by the per-round slot total (sum of the balanced
+    # per-piece batches, >= round_batch), so rounds = iterations / that
+    eng = getattr(sampler, "_engine", None)
+    bt = sum(getattr(eng, "piece_batches", None) or [rb])
+    best = float("inf")
+    its = draws = 0
+    for _ in range(repeats):
+        it0 = sampler.stats.iterations
+        cd0 = sampler.stats.candidate_draws
+        t0 = time.perf_counter()
+        sampler.sample(n)
+        dt = time.perf_counter() - t0
+        if dt < best:
+            best = dt
+            its = sampler.stats.iterations - it0
+            draws = sampler.stats.candidate_draws - cd0
+    return {
+        "n": n,
+        "seconds": best,
+        "samples_per_s": n / max(best, 1e-9),
+        "rounds": its // max(bt, 1),
+        "iterations": its,
+        "psi": draws / n,
+    }
 
-    host = SetUnionSampler(wl.cat, wl.joins, est.cover, seed=5)
+
+def _engine(wl, cover, mode: str, rb: int, seed: int = 5) -> SetUnionSampler:
+    return SetUnionSampler(wl.cat, wl.joins, cover, seed=seed,
+                           backend="jax", round_batch=rb, fused_rounds=mode)
+
+
+def _bench_pair(tag: str, wl, cover, n: int, rb: int, repeats: int):
+    """Host-driven vs device-resident loop at one matched configuration."""
+    res = {}
+    for mode in ("host", "device"):
+        m = _measure(_engine(wl, cover, mode, rb), n, repeats, rb)
+        res[mode] = m
+        emit(f"union_engine_{tag}_{mode}_rb{rb}", m["seconds"] / n * 1e6,
+             f"rate={m['samples_per_s']:,.0f}/s rounds={m['rounds']} "
+             f"psi={m['psi']:.2f}")
+        record(f"{tag}_{mode}_rb{rb}", engine=mode, round_batch=rb,
+               workload=tag, **m)
+    sp = res["device"]["samples_per_s"] / max(res["host"]["samples_per_s"],
+                                              1e-9)
+    emit(f"union_engine_{tag}_speedup_rb{rb}", 0.0,
+         f"device/host={sp:.2f}x")
+    return res, sp
+
+
+def _bench_numpy(tag: str, wl, cover, n: int) -> None:
+    host = SetUnionSampler(wl.cat, wl.joins, cover, seed=5)
     host.sample(512)
     t0 = time.perf_counter()
     host.sample(n)
-    t_host = time.perf_counter() - t0
+    dt = time.perf_counter() - t0
+    emit(f"union_engine_{tag}_numpy", dt / n * 1e6,
+         f"rate={n/max(dt,1e-9):,.0f}/s")
+    record(f"{tag}_numpy", engine="numpy", workload=tag, n=n, seconds=dt,
+           samples_per_s=n / max(dt, 1e-9))
 
-    dev = SetUnionSampler(wl.cat, wl.joins, est.cover, seed=5,
-                          backend="jax", round_batch=round_batch)
-    dev.sample(512)                          # compile
-    stats0 = dev.stats.candidate_draws
-    t0 = time.perf_counter()
-    dev.sample(n)
-    t_dev = time.perf_counter() - t0
-    psi = (dev.stats.candidate_draws - stats0) / n
 
-    emit(f"union_engine_{tag}_host", t_host / n * 1e6,
-         f"rate={n/max(t_host,1e-9):,.0f}/s")
-    emit(f"union_engine_{tag}_jax_rb{round_batch}", t_dev / n * 1e6,
-         f"rate={n/max(t_dev,1e-9):,.0f}/s "
-         f"speedup={t_host/max(t_dev,1e-9):.2f}x psi={psi:.2f}")
+def run(args) -> int:
+    n = args.samples
+    wl2 = uq1(scale=args.scale, overlap=0.4, seed=0, n_joins=2)
+    wr = warmup(wl2.cat, wl2.joins, method="exact")
+    cover2 = estimate_union(wr.oracle).cover
+
+    # headline: UQ1 2-join, host loop vs device loop across round batches.
+    # The host loop pays one device→host sync per round, so it degrades as
+    # the round batch shrinks; the device loop is flat — the matched-config
+    # speedup at small batches is the O(rounds)→O(1) sync win.
+    best_host = best_dev = 0.0
+    matched = {}
+    for rb in args.rb_sweep:
+        res, sp = _bench_pair("uq1x2", wl2, cover2, n, rb, args.repeats)
+        matched[rb] = sp
+        best_host = max(best_host, res["host"]["samples_per_s"])
+        best_dev = max(best_dev, res["device"]["samples_per_s"])
+    speedup = max(matched.values())
+    emit("union_engine_uq1x2_summary", 0.0,
+         f"matched-config device/host speedup max={speedup:.2f}x "
+         f"(best device {best_dev:,.0f}/s, best host loop "
+         f"{best_host:,.0f}/s)")
+    record("uq1x2_summary", workload="uq1x2",
+           matched_speedup={str(rb): s for rb, s in matched.items()},
+           max_matched_speedup=speedup,
+           best_device_samples_per_s=best_dev,
+           best_host_samples_per_s=best_host)
+
+    _bench_numpy("uq1x2", wl2, cover2, min(n, 20_000))
+
+    if not args.smoke:
+        # coverage rows: other union shapes, device loop at the default batch
+        for tag, wl, nn in (
+                ("uq1x5", uq1(scale=args.scale, overlap=0.4, seed=0,
+                              n_joins=5), n),
+                ("uq3tree", uq3(scale=args.scale, overlap=0.3, seed=0), n),
+                ("uq4cyclic", uq4(scale=args.scale, seed=0), n // 5)):
+            wrx = warmup(wl.cat, wl.joins, method="exact")
+            cov = estimate_union(wrx.oracle).cover
+            m = _measure(_engine(wl, cov, "device", 4096), nn, args.repeats,
+                         4096)
+            emit(f"union_engine_{tag}_device_rb4096", m["seconds"] / nn * 1e6,
+                 f"rate={m['samples_per_s']:,.0f}/s rounds={m['rounds']} "
+                 f"psi={m['psi']:.2f}")
+            record(f"{tag}_device_rb4096", engine="device", round_batch=4096,
+                   workload=tag, **m)
+
+    write_json(args.json, bench="union_engine", scale=args.scale)
+
+    if args.require_device_speedup:
+        if speedup < args.require_device_speedup:
+            print(f"FAIL: device/host speedup {speedup:.2f}x < required "
+                  f"{args.require_device_speedup}x", flush=True)
+            return 1
+        print(f"PASS: device/host speedup {speedup:.2f}x >= "
+              f"{args.require_device_speedup}x", flush=True)
+    return 0
+
+
+def _parse(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small n + headline comparison only (CI perf-smoke)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write structured results (BENCH_union.json)")
+    ap.add_argument("--scale", type=float, default=0.1)
+    ap.add_argument("--samples", type=int, default=None)
+    ap.add_argument("--repeats", type=int, default=None)
+    ap.add_argument("--rb-sweep", type=int, nargs="+", default=None)
+    ap.add_argument("--require-device-speedup", type=float, default=0.0,
+                    help="exit non-zero when the best matched-config "
+                         "device/host speedup is below this")
+    args = ap.parse_args(argv)
+    if args.samples is None:
+        args.samples = 20_000 if args.smoke else 100_000
+    if args.repeats is None:
+        args.repeats = 2 if args.smoke else 3
+    if args.rb_sweep is None:
+        args.rb_sweep = [256, 1024] if args.smoke else list(_RB_SWEEP)
+    return args
 
 
 def main(small: bool = True) -> None:
-    scale = 0.1 if small else 0.5
-    n = 50_000 if small else 400_000
-    wl2 = uq1(scale=scale, overlap=0.4, seed=0, n_joins=2)
-    _bench_one("uq1x2", wl2, n, 16384)
-    wl5 = uq1(scale=scale, overlap=0.4, seed=0, n_joins=5)
-    _bench_one("uq1x5", wl5, n, 16384)
-    wlt = uq3(scale=scale, overlap=0.3, seed=0)
-    _bench_one("uq3tree", wlt, n, 16384)
-    # cyclic union (§8.2 skeleton+residual rejection inside the fused round);
-    # smaller n — the host engine pays the residual rejections per walk
-    wlc = uq4(scale=scale, seed=0)
-    _bench_one("uq4cyclic", wlc, n // 5, 16384)
-    # round-batch sensitivity on the 2-join union
-    for rb in (4096, 32768) if small else (8192, 65536):
-        _bench_one(f"uq1x2_rb{rb}", wl2, n, rb)
+    """benchmarks.run entry point."""
+    rc = run(_parse(["--smoke"] if small else []))
+    if rc:
+        raise RuntimeError("union_engine gate failed")
 
 
 if __name__ == "__main__":
-    main(small=False)
+    sys.exit(run(_parse()))

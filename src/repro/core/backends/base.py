@@ -30,6 +30,16 @@ Sources may optionally expose ``pop_residual_rejects() -> int`` (drain-style
 counter of §8.2 residual rejections); the union samplers fold it into
 ``SamplerStats.residual_rejects`` after every ``draw``.
 
+Engines running the persistent device round loop (DESIGN.md §4a) optionally
+expose ``sample_async(n) -> SampleHandle``: the call *dispatches* the whole
+multi-round program and returns immediately; ``result()`` blocks on the
+device computation and assembles the ``SampleSet``.  Consumers feature-test
+with ``getattr(engine, "sample_async", None)`` — the serve front-end uses it
+for dispatch-then-drain double buffering (launch batch *k+1* before draining
+batch *k*).  Synchronous engines are wrapped by the facade's ready-handle
+fallback (:class:`repro.core.union_sampler.ReadySample`), so the handle
+contract is uniform.
+
 See DESIGN.md ("Backend architecture") for the full contract and the guide to
 adding a new backend.
 """
@@ -63,6 +73,16 @@ class CandidateSource(Protocol):
         ...
 
     def is_empty(self) -> bool:
+        ...
+
+
+@runtime_checkable
+class SampleHandle(Protocol):
+    """In-flight ``sample_async`` dispatch; ``result()`` blocks and
+    assembles.  A handle is single-use and must be resolved in dispatch
+    order for engines whose carry state is donated between calls."""
+
+    def result(self):
         ...
 
 

@@ -24,12 +24,17 @@ Three layers, bottom-up:
   secondary for verification (64 bits total; the host oracle uses 128 — see
   DESIGN.md for the collision budget).  A probe is one ``searchsorted`` per
   relation plus a ``kmax``-wide duplicate window check, AND-reduced.
-* :class:`JaxUnionSampler` — fuses one whole Algorithm-1 round into a single
-  jitted program: multinomial cover selection (per-slot categorical),
-  candidate generation for *all* joins, cover-membership acceptance masks
-  with **retry-within-the-selected-join** (the distribution-correct loop —
-  see union_sampler's module docstring on the printed-pseudocode pitfall),
-  and compaction of accepted slots.  The host only tops up between rounds.
+* :class:`JaxUnionSampler` — runs the *entire multi-round* Algorithm-1 loop
+  as one device-resident jitted program: a ``lax.while_loop`` over fused
+  rounds (multinomial cover selection, candidate generation for all joins,
+  cover-membership acceptance with **retry-within-the-selected-join** — the
+  distribution-correct loop, see union_sampler's module docstring on the
+  printed-pseudocode pitfall), with the per-piece shortfall vector, FIFO
+  ring-buffer surplus banks, dead-piece flags and the stats counters all as
+  donated device carry.  ``sample(n)`` crosses the host boundary once;
+  ``sample_async(n)`` exposes the dispatch for double-buffered serving.
+  ``fused_rounds="host"`` drives the identical round program from a host
+  loop (one sync per round) for parity testing.
 
 :class:`JaxBackend` packages the per-join pieces behind the
 :class:`~repro.core.backends.base.Backend` protocols so
@@ -156,8 +161,13 @@ def _pack_jnp(rows: Dict[str, jnp.ndarray], attrs: Sequence[str],
 def _as_i32(col: np.ndarray, what: str) -> np.ndarray:
     col = np.asarray(col, np.int64)
     if col.size and (int(col.min()) < 0 or int(col.max()) >= _I32_LIM):
-        raise ValueError(f"jax backend: {what} outside int32 domain "
-                         "(re-encode the dictionary or use backend='numpy')")
+        lo, hi = int(col.min()), int(col.max())
+        raise ValueError(
+            f"jax backend: {what} outside the int32 device domain "
+            f"(values span [{lo}, {hi}], needing {max(hi, abs(lo)).bit_length()}"
+            " bits but the device substrate has 31 usable bits). Re-encode the"
+            " dictionary, use backend='numpy', or see the ROADMAP item on"
+            " int64/two-limb packed keys for the device-side fix")
     return col.astype(np.int32)
 
 
@@ -183,6 +193,7 @@ class _NodeCfg:
     new_attrs: Tuple[str, ...]
     kind: str = "tree"               # "tree" | "residual" (§8.2 cycle closer)
     max_degree: int = 0              # residual only: M of the d/M acceptance
+    uniform: bool = False            # all EW weights equal: pick by floor(u*d)
 
 
 class DeviceTreeJoin:
@@ -228,11 +239,16 @@ class DeviceTreeJoin:
             if dom >= _I32_LIM:
                 raise ValueError(
                     f"jax backend: packed edge-key domain of node {n.alias!r} "
-                    f"({dom}) exceeds int32 (the device substrate is 32-bit; "
-                    "use backend='numpy')")
+                    f"(relation {rel.name!r}, edge attrs "
+                    f"{tuple(n.edge_attrs)!r}) spans {dom} key combinations "
+                    f"needing {int(dom).bit_length()} bits, but the device "
+                    "key substrate is int32 (31 usable bits). Re-encode the "
+                    "dictionary, use backend='numpy', or see the ROADMAP item "
+                    "on int64/two-limb packed keys for the device-side fix")
             key = _pack_np([rel.columns[a] for a in n.edge_attrs], radices)
             perm = np.argsort(key, kind="stable")
             skeys = key[perm].astype(np.int32)
+            uniform = False
             if n.kind == "residual":
                 # §8.2: residual picks are uniform among matches via
                 # floor(u*d) in _residual_step — no weight prefix needed;
@@ -240,13 +256,22 @@ class DeviceTreeJoin:
                 wp = np.zeros(1, dtype=np.float64)
             else:
                 w = js.node_weights[n.alias]
-                wp = np.zeros(rel.nrows + 1, dtype=np.float64)
-                np.cumsum(w[perm], out=wp[1:])
+                # equal-weight nodes (leaves always; any node whose rows all
+                # continue identically) pick uniformly among the d matches —
+                # same law as the inverse-CDF pick, one searchsorted cheaper
+                uniform = (bool(w.size) and float(w.flat[0]) > 0
+                           and bool(np.all(w == w.flat[0])))
+                if uniform:
+                    wp = np.zeros(1, dtype=np.float64)
+                else:
+                    wp = np.zeros(rel.nrows + 1, dtype=np.float64)
+                    np.cumsum(w[perm], out=wp[1:])
             new_attrs = tuple(a for a in rel.attrs if a not in produced)
             produced.update(rel.attrs)
             self.node_cfgs.append(_NodeCfg(
                 n.alias, tuple(n.edge_attrs), radices, new_attrs,
-                kind=n.kind, max_degree=int(js.edges[n.alias].max_degree)))
+                kind=n.kind, max_degree=int(js.edges[n.alias].max_degree),
+                uniform=uniform))
             self.sorted_keys.append(jnp.asarray(skeys))
             self.perm.append(jnp.asarray(perm.astype(np.int32)))
             self.wprefix.append(jnp.asarray(wp, jnp.float32))
@@ -356,8 +381,15 @@ class DeviceTreeJoin:
                 continue
             q = _pack_jnp(rows, cfg.edge_attrs, cfg.radices)
             lo, hi = self._ranges(i, q)
-            pos, alive = _inverse_cdf_pick(self.wprefix[i], lo, hi, u)
-            ok = ok & alive & (hi > lo)
+            if cfg.uniform:
+                d = hi - lo
+                off = jnp.floor(u * jnp.maximum(d, 1).astype(jnp.float32)
+                                ).astype(jnp.int32)
+                pos = lo + jnp.minimum(off, jnp.maximum(d - 1, 0))
+                ok = ok & (d > 0)
+            else:
+                pos, alive = _inverse_cdf_pick(self.wprefix[i], lo, hi, u)
+                ok = ok & alive & (hi > lo)
             child = self.perm[i][jnp.clip(pos, 0, self.perm[i].shape[0] - 1)]
             for a, c in self.cols[i].items():
                 rows[a] = c[child]
@@ -456,6 +488,10 @@ class JaxCandidateSource:
         self._buf: Optional[Rows] = None
         self._buf_pos = 0
         self._res_rej = 0
+        # double-buffered dispatch: the next device round is launched before
+        # the current one's rows are compacted on the host, so device compute
+        # hides behind the host-side top-up work (serving path)
+        self._inflight = None
 
     def is_empty(self) -> bool:
         return self.tree.is_empty()
@@ -465,15 +501,26 @@ class JaxCandidateSource:
         n, self._res_rej = self._res_rej, 0
         return n
 
-    def _refill(self) -> int:
-        """One device round into the buffer; returns rows banked."""
+    def _dispatch(self):
+        """Launch one device round without blocking (JAX async dispatch)."""
         self.key, sub = jax.random.split(self.key)
-        rows, ok, walk_ok = self._draw_jit(sub)
+        return self._draw_jit(sub)
+
+    def _refill(self) -> int:
+        """Drain the in-flight device round into the buffer and immediately
+        dispatch the next one, so round *k+1* computes on device while the
+        host compacts round *k*'s rows.  Returns rows banked."""
+        pending = self._inflight if self._inflight is not None \
+            else self._dispatch()
+        self._inflight = self._dispatch()
+        rows, ok, walk_ok = pending
         ok = np.asarray(ok)
         if self.tree.has_residual:
             self._res_rej += int(np.asarray(walk_ok).sum() - ok.sum())
         idx = np.nonzero(ok)[0]
-        self._buf = {a: np.asarray(rows[a])[idx].astype(np.int64)
+        # copy=False: the gather already materialises int64-compatible rows,
+        # so a matching dtype round-trips without a second allocation
+        self._buf = {a: np.asarray(rows[a])[idx].astype(np.int64, copy=False)
                      for a in self.attrs}
         self._buf_pos = 0
         return int(idx.shape[0])
@@ -482,6 +529,13 @@ class JaxCandidateSource:
              batch: Optional[int] = None) -> Tuple[Rows, int]:
         if self.is_empty():
             raise EmptyJoinError(f"join {self.join_name!r} is empty")
+        # fast path: the buffer already covers the request — serve one
+        # zero-copy slice without re-entering the refill machinery at all
+        if (self._buf is not None
+                and self._buf_pos + count <= rows_length(self._buf)):
+            lo, hi = self._buf_pos, self._buf_pos + count
+            self._buf_pos = hi
+            return {a: c[lo:hi] for a, c in self._buf.items()}, 0
         got: List[Rows] = []
         draws = 0
         have = 0
@@ -503,6 +557,8 @@ class JaxCandidateSource:
         else:
             raise RuntimeError(f"JaxCandidateSource({self.join_name}): "
                                "round budget exhausted")
+        if len(got) == 1:
+            return got[0], draws
         return ({a: np.concatenate([g[a] for g in got])
                  for a in self.attrs}, draws)
 
@@ -629,14 +685,168 @@ class JaxBackend(Backend):
 
 
 # ---------------------------------------------------------------------------
-# Fused Algorithm-1 round
+# Fused Algorithm-1 rounds — one-round program + the persistent device loop
 # ---------------------------------------------------------------------------
 
 
-class JaxUnionSampler:
-    """One whole Algorithm-1 top-up round as a single jitted program.
+# SamplerStats fields the fused engines accumulate as one device vector
+# (fetched once per sample() call in device mode)
+_STAT_FIELDS = ("iterations", "candidate_draws", "cover_rejects",
+                "residual_rejects", "dropped_slots")
 
-    Per round (``round_batch`` candidates per join, fixed shapes):
+
+def _cover_cum(probs_base: jnp.ndarray, dead: jnp.ndarray):
+    """Dead-masked, renormalised selection CDF + unreachable flag.
+
+    Shared by the host-driven round wrapper and the device loop body so the
+    float32 arithmetic (and hence every categorical pick) is identical on
+    both paths — the parity tests pin them bit for bit."""
+    p = jnp.where(dead, jnp.float32(0), probs_base)
+    s = jnp.sum(p)
+    return jnp.cumsum(p) / jnp.maximum(s, jnp.float32(1e-30)), s <= 0
+
+
+def _piece_batches(probs, round_batch: int, balance: str,
+                   slack: float) -> Tuple[int, ...]:
+    """Static per-join candidate widths for one round.
+
+    ``balance="cover"`` sizes each join's draw batch proportionally to its
+    cover selection probability (head-room ``slack``, floor 256, rounded to
+    multiples of 128 to bound shape variety) instead of drawing
+    ``round_batch`` candidates from *every* join — most of a round's compute
+    is the per-join draws, and a piece with 5 % selection mass can never
+    emit more than ~5 % of the round's slots.  Undershoot is harmless: the
+    shortfall carry tops the piece up next round.  ``balance="full"`` keeps
+    the uniform-width behaviour."""
+    nj = len(probs)
+    if balance != "cover":
+        return (int(round_batch),) * nj
+    p = np.maximum(np.asarray(probs, np.float64), 0)
+    s = p.sum()
+    if s <= 0:
+        return (int(round_batch),) * nj
+    out = []
+    for j in range(nj):
+        want = int(np.ceil(slack * (p[j] / s) * round_batch))
+        b = max(256, ((want + 127) // 128) * 128)
+        out.append(min(int(round_batch), b))
+    return tuple(out)
+
+
+def _emit_and_bank(out, pos, bank, head, count,
+                   cols, dt, ft, acc, cap: int, C: int, W: int,
+                   bank_base=None, fresh_base=None):
+    """Scatter one round's emission into the output buffer + roll the banks.
+
+    Row layout: all attributes plus the home piece id travel as one
+    ``(rows, A+1)`` int32 matrix, so every emission/banking step is a
+    single scatter (or gather) op instead of one per attribute —
+    XLA:CPU scatter has high per-op cost.  ``out`` is ``(C, A+1)``,
+    ``bank`` is ``(nj, cap, A+1)``, ``cols[j]`` is the piece's
+    accepted-compacted ``(B_j, A+1)`` matrix.
+
+    Emission order (mirrored exactly by the host loop): pieces in cover
+    order; per piece the ``dt`` banked rows (FIFO, oldest first) then the
+    ``ft`` freshly accepted rows.  Surplus accepted rows are pushed at the
+    ring tail — which the take leaves in place (``tail = head + count``
+    before both operations).  All scatters use ``mode="drop"`` with an
+    out-of-range destination (``C`` / ``cap``) as the mask.
+
+    ``bank_base``/``fresh_base`` override the per-piece output offsets of
+    the banked/fresh rows — the sharded loop passes globally computed
+    offsets so each shard scatters its rows straight to their final global
+    positions (the default packs this shard's take contiguously at ``pos``).
+    """
+    nj = dt.shape[0]
+    take = dt + ft
+    if bank_base is None:
+        base = pos + jnp.cumsum(take) - take        # exclusive prefix
+        bank_base = base
+        fresh_base = base + dt
+    # banked rows: one (nj, W, A+1) ring gather + one masked scatter
+    r = jnp.arange(W, dtype=jnp.int32)
+    bmask = r[None, :] < dt[:, None]
+    bidx = (head[:, None] + r[None, :]) % cap
+    bdst = jnp.where(bmask, bank_base[:, None] + r[None, :], C).reshape(-1)
+    jrow = jnp.arange(nj, dtype=jnp.int32)[:, None]
+    bvals = bank[jrow, bidx]                        # (nj, W, A+1)
+    out = out.at[bdst].set(bvals.reshape(nj * W, -1), mode="drop")
+    # fresh rows + surplus push, per piece (static per-join widths)
+    push = jnp.minimum(acc - ft, cap - (count - dt))
+    for j in range(nj):
+        cj = cols[j]
+        bj = cj.shape[0]
+        rj = jnp.arange(bj, dtype=jnp.int32)
+        fdst = jnp.where(rj < ft[j], fresh_base[j] + rj, C)
+        pidx = jnp.where((rj >= ft[j]) & (rj < ft[j] + push[j]),
+                         (head[j] + count[j] + rj - ft[j]) % cap, cap)
+        out = out.at[fdst].set(cj, mode="drop")
+        bank = bank.at[j, pidx].set(cj, mode="drop")
+    head = (head + dt) % cap
+    count = count - dt + push
+    return out, pos + jnp.sum(take), bank, head, count
+
+
+class _ReadyHandle:
+    """Degenerate async handle: the sample already exists."""
+
+    def __init__(self, ss):
+        self._ss = ss
+
+    def result(self):
+        return self._ss
+
+
+class _PendingSample:
+    """In-flight device-loop sample.
+
+    The whole multi-round loop is already dispatched (JAX async dispatch);
+    ``result()`` performs the single device→host fetch, folds the stats
+    vector, applies the host-drawn output shuffle and builds the SampleSet.
+    The serving path dispatches call *k+1* before draining call *k*.
+    """
+
+    def __init__(self, sampler, n, out, total, rounds, fail,
+                 stats_vec, shuffle):
+        self._sampler = sampler
+        self._n = int(n)
+        self._out = out
+        self._total = total
+        self._rounds = rounds
+        self._fail = fail
+        self._stats_vec = stats_vec
+        self._shuffle = shuffle
+        self._done = None
+
+    def result(self):
+        if self._done is not None:
+            return self._done
+        s = self._sampler
+        if bool(np.asarray(self._fail)):
+            raise RuntimeError("all cover pieces unreachable")
+        total = int(np.asarray(self._total))
+        s.last_rounds = int(np.asarray(self._rounds))
+        if total < self._n:
+            raise RuntimeError("JaxUnionSampler: top-up budget exhausted")
+        vec = np.asarray(self._stats_vec)
+        for f, v in zip(_STAT_FIELDS, vec):
+            setattr(s.stats, f, getattr(s.stats, f) + int(v))
+        mat = s._merge_out(self._out)[:self._n].astype(np.int64)[
+            self._shuffle]
+        rows = {a: np.ascontiguousarray(mat[:, i])
+                for i, a in enumerate(s.attrs)}
+        home = np.ascontiguousarray(mat[:, -1])
+        from ..relation import fingerprint128
+        from ..union_sampler import SampleSet
+        fp = fingerprint128([rows[a] for a in sorted(s.attrs)])
+        self._done = SampleSet(list(s.attrs), rows, home, fp, s.stats)
+        return self._done
+
+
+class JaxUnionSampler:
+    """The multi-round Algorithm-1 loop as a single device-resident program.
+
+    Per round (fixed shapes; ``piece_batches[j]`` candidates for join j):
 
     1. **multinomial cover selection** — per-slot categorical on the piece
        probabilities, histogrammed into per-piece targets (an i.i.d.
@@ -650,28 +860,35 @@ class JaxUnionSampler:
        round shapes stay static and no piece is ever re-selected,
     3. **cover-membership acceptance** — a candidate of piece ``j`` survives
        iff no earlier cover piece contains it (batched device probes),
-    4. **compaction** — accepted candidates sorted to the front per join;
-       the round emits ``min(target_j, accepted_j)`` of them and returns the
-       per-piece shortfall.
+    4. **compaction** — accepted candidates ranked to the front per join
+       (a cumsum scatter, not a sort); the round serves each per-piece
+       target first from that piece's FIFO surplus bank, then from the
+       fresh accepts, and pushes leftover accepts back into the bank.
 
     Crucially the shortfall of piece ``j`` stays *assigned to piece j* across
     rounds (it is carried, never re-drawn from the selection distribution):
     re-selecting a piece after a rejection is the printed-pseudocode pitfall
     documented in union_sampler.  Since each round's accepted candidates are
-    i.i.d. uniform over their piece, the host also banks the surplus
-    (accepted beyond ``target_j``) and serves later targets from it before
-    asking the device again — this is what makes the engine a streaming
-    source for serving.
+    i.i.d. uniform over their piece, serving a target from the bank (a
+    deterministic FIFO over an i.i.d. stream) is unbiased — this is what
+    makes the engine a streaming source for serving.
 
-    The host loop only tracks the shortfall vector, drains surplus, zeroes
-    pieces that repeatedly yield nothing (estimation noise gave a positive
-    size to an empty piece) and stops at ``n`` accepted samples.
+    ``fused_rounds="device"`` (default) runs the *whole* loop — shortfall
+    vector, ring-buffer banks, dead-piece detection, output compaction and
+    the SamplerStats counters — inside one ``lax.while_loop`` program with
+    donated carry buffers, so ``sample(n)`` crosses the device boundary
+    once.  ``fused_rounds="host"`` drives the identical round program from a
+    host loop with numpy twin banks (one sync per round) — kept for parity
+    testing and debugging; the two modes produce bit-identical samples and
+    stats from the same seed.
     """
 
     def __init__(self, backend: JaxBackend, cover, seed: int = 0,
                  round_batch: int = 4096,
                  dead_rounds: int = 8, max_rounds: int = 4096,
-                 surplus_cap: Optional[int] = None, stats=None):
+                 surplus_cap: Optional[int] = None, stats=None,
+                 fused_rounds: str = "device", balance: str = "cover",
+                 balance_slack: float = 1.5):
         self.backend = backend
         self.cover = cover
         self.order = list(cover.order)
@@ -682,86 +899,260 @@ class JaxUnionSampler:
         self.round_batch = int(round_batch)
         self.dead_rounds = int(dead_rounds)
         self.max_rounds = int(max_rounds)
-        self.surplus_cap = (8 * self.round_batch if surplus_cap is None
-                            else int(surplus_cap))
+        self.surplus_cap = max(1, 8 * self.round_batch if surplus_cap is None
+                               else int(surplus_cap))
+        if fused_rounds not in ("device", "host"):
+            raise ValueError("fused_rounds must be 'device' or 'host', got "
+                             f"{fused_rounds!r}")
+        self.fused_rounds = fused_rounds
         if stats is None:
             from ..union_sampler import SamplerStats
             stats = SamplerStats()
         self.stats = stats
+        base = np.maximum(np.asarray(cover.selection_probs(), np.float64), 0)
+        s = base.sum()
+        self._probs_base = jnp.asarray(base / s if s > 0 else base,
+                                       jnp.float32)
+        self.piece_batches = _piece_batches(base, self.round_batch,
+                                            balance, balance_slack)
+        # per-piece bank drain cap per round (a semantics constant — the
+        # host twin uses the same cap, keeping dt = min(need, count, W)
+        # identical).  It bounds the ring gather/scatter width inside the
+        # device loop, where XLA:CPU per-op scatter cost dominates; banks
+        # stay shallow under cover-balanced batches, so a narrow window
+        # drains them just as fast while the wide one mostly moves padding.
+        self._drain_w = min(self.round_batch, 256)
+        self.last_rounds = 0
         self._round_jit = jax.jit(self._round_impl)
-        # per-piece surplus bank: accepted-but-not-yet-emitted piece samples
-        self._bank: List[List[Rows]] = [[] for _ in self.order]
-        self._bank_n = np.zeros(len(self.order), dtype=np.int64)
-        # dead-piece state persists across sample() calls (the cover is
-        # fixed per engine; rediscovering empty pieces per call would cost
-        # dead_rounds device rounds on every request)
-        self._dead: set = set()
-        self._streak = np.zeros(len(self.order), dtype=np.int64)
+        # persistent device-loop state (fused_rounds="device"): PRNG key,
+        # shortfall vector, ring banks and dead-piece flags all live on
+        # device and carry across sample() calls
+        self._loop_cache: Dict[int, object] = {}
+        self._dev_state = None
+        # host-loop twin state (fused_rounds="host"): numpy ring banks with
+        # identical FIFO semantics; allocated on first host sample
+        nj = len(self.order)
+        self._h_dead = np.zeros(nj, dtype=bool)
+        self._h_streak = np.zeros(nj, dtype=np.int64)
+        self._h_bank = None
+        self._h_head = np.zeros(nj, dtype=np.int64)
+        self._h_count = np.zeros(nj, dtype=np.int64)
 
-    # -- the fused program ----------------------------------------------------
-    def _round_impl(self, probs_cum: jnp.ndarray, carry_need: jnp.ndarray,
-                    extra_target: jnp.ndarray, key: jax.Array):
-        batch, nj = self.round_batch, len(self.trees)
+    # -- the fused round program ----------------------------------------------
+    def _ensure_device_inputs(self) -> None:
+        """Materialise the replicated membership indexes *outside* any trace
+        (their device buffers are stored on the index objects; building them
+        lazily inside a jit/while_loop trace would store tracers instead).
+        The sharded engine keeps its own hash-partitioned indexes and
+        overrides this to a no-op."""
+        _ = self.backend.members
+
+    def _round_core(self, key: jax.Array, probs_cum: jnp.ndarray,
+                    carry_need: jnp.ndarray, extra_target: jnp.ndarray):
+        """One Algorithm-1 round (traceable; shared by the host-driven
+        wrapper and the device loop body).  Returns per join the
+        accepted-compacted candidate columns plus (ok, residual, accepted)
+        counts and the per-piece need = carry + this round's targets."""
+        nj = len(self.trees)
         # resolved at trace time (first round): keeps the lazy backend
         # membership unbuilt for subclasses that override the round program
         members = [self.backend.members[n] for n in self.order]
         kpick, *jks = jax.random.split(key, nj + 1)
         # (1) multinomial cover selection: categorical picks → histogram
-        u = jax.random.uniform(kpick, (batch,))
+        u = jax.random.uniform(kpick, (self.round_batch,))
         pick = jnp.clip(jnp.searchsorted(probs_cum, u, side="right"
                                          ).astype(jnp.int32), 0, nj - 1)
-        valid = (jnp.arange(batch) < extra_target).astype(jnp.int32)
+        valid = (jnp.arange(self.round_batch)
+                 < extra_target).astype(jnp.int32)
         need = carry_need + jnp.zeros((nj,), jnp.int32).at[pick].add(valid)
         # (2)+(3) per join: batched candidate draw (incl. §8.2 residual-edge
         # verification for cyclic pieces) + earlier-piece rejection
-        out_cols = []
-        ok_counts = []
-        res_counts = []
-        acc_counts = []
+        cols, okc, resc, accc = [], [], [], []
         for j, tree in enumerate(self.trees):
-            rows, acc, walk_ok = tree.draw(jks[j], batch)
-            res_counts.append(jnp.sum(walk_ok) - jnp.sum(acc))
+            bj = self.piece_batches[j]
+            rows, acc, walk_ok = tree.draw(jks[j], bj)
+            resc.append(jnp.sum(walk_ok) - jnp.sum(acc))
             for q in range(j):             # pieces earlier in cover order
                 acc = acc & ~members[q].contains(rows)
-            # (4) compaction: accepted candidates first, original slot order
-            perm = jnp.argsort(~acc)
-            out_cols.append(tuple(rows[a][perm] for a in self.attrs))
-            ok_counts.append(jnp.sum(walk_ok))
-            acc_counts.append(jnp.sum(acc))
-        ok_counts = jnp.stack(ok_counts).astype(jnp.int32)
-        res_counts = jnp.stack(res_counts).astype(jnp.int32)
-        acc_counts = jnp.stack(acc_counts).astype(jnp.int32)
-        take = jnp.minimum(need, acc_counts)
-        shortfall = need - take
-        return out_cols, ok_counts, res_counts, acc_counts, take, shortfall
+            # (4) compaction: accepted rows to the front in slot order — a
+            # rank scatter (cumsum - 1) on the (B_j, A+1) row matrix (last
+            # column = home piece id, so it rides every later scatter for
+            # free): one scatter per piece, cheaper than the per-attr argsort
+            dst = jnp.where(acc, jnp.cumsum(acc) - 1, bj)
+            mat = jnp.stack([rows[a].astype(jnp.int32)
+                             for a in self.attrs]
+                            + [jnp.full(bj, j, jnp.int32)], axis=1)
+            cols.append(jnp.zeros((bj, mat.shape[1]), jnp.int32)
+                        .at[dst].set(mat, mode="drop"))
+            okc.append(jnp.sum(walk_ok))
+            accc.append(jnp.sum(acc))
+        return (cols, jnp.stack(okc).astype(jnp.int32),
+                jnp.stack(resc).astype(jnp.int32),
+                jnp.stack(accc).astype(jnp.int32), need)
 
-    # -- host top-up loop -----------------------------------------------------
-    def _drain_bank(self, j: int, want: int, parts, homes) -> int:
-        """Emit up to ``want`` banked piece-``j`` samples; returns count."""
-        got = 0
-        while got < want and self._bank[j]:
-            rows = self._bank[j][0]
-            k = rows_length(rows)
-            use = min(k, want - got)
-            parts.append({a: rows[a][:use] for a in self.attrs})
-            homes.append(np.full(use, j, dtype=np.int64))
-            if use == k:
-                self._bank[j].pop(0)
-            else:
-                self._bank[j][0] = {a: rows[a][use:] for a in self.attrs}
-            self._bank_n[j] -= use
-            got += use
-        return got
+    def _round_impl(self, probs_base: jnp.ndarray, dead: jnp.ndarray,
+                    carry_need: jnp.ndarray, extra_target: jnp.ndarray,
+                    key: jax.Array):
+        """Host-driven entry point: one jitted round (fused_rounds="host")."""
+        probs_cum, bad = _cover_cum(probs_base, dead)
+        cols, okc, resc, accc, need = self._round_core(
+            key, probs_cum, carry_need, extra_target)
+        return cols, okc, resc, accc, need, bad
+
+    # -- the persistent device loop -------------------------------------------
+    def _init_state(self):
+        """Fresh device carry: key + shortfall + ring banks + dead flags."""
+        nj, cap = len(self.order), self.surplus_cap
+        return {
+            "key": self.key,
+            "owed": jnp.zeros(nj, jnp.int32),
+            "dead": jnp.zeros(nj, dtype=bool),
+            "streak": jnp.zeros(nj, jnp.int32),
+            "bank": jnp.zeros((nj, cap, len(self.attrs) + 1), jnp.int32),
+            "bank_head": jnp.zeros(nj, jnp.int32),
+            "bank_count": jnp.zeros(nj, jnp.int32),
+        }
+
+    def _build_loop(self, C: int):
+        """Compile the whole multi-round loop for output capacity ``C``.
+
+        The carry (state + output buffers) is donated, so repeated calls
+        reuse the same device allocations; everything the host needs back —
+        samples, home pieces, total, round count and the stats vector —
+        comes out of the single program invocation."""
+        cap = self.surplus_cap
+        W = min(self._drain_w, cap)
+        bt = int(sum(self.piece_batches))
+        max_rounds = jnp.int32(self.max_rounds)
+        dead_rounds = jnp.int32(self.dead_rounds)
+
+        def loop_fn(state, out, n, probs_base):
+            def cond(c):
+                _s, _o, total, rounds, fail, _st = c
+                return (total < n) & (rounds < max_rounds) & ~fail
+
+            def body(c):
+                state, out, total, rounds, fail, stats = c
+                probs_cum, bad = _cover_cum(probs_base, state["dead"])
+                key, kround = jax.random.split(state["key"])
+                extra = jnp.clip(n - total - jnp.sum(state["owed"]),
+                                 0, self.round_batch)
+                cols, okc, resc, accc, need = self._round_core(
+                    kround, probs_cum, state["owed"], extra)
+                # bank take (FIFO, capped) → fresh take → carried shortfall
+                dt = jnp.minimum(jnp.minimum(need, state["bank_count"]),
+                                 self._drain_w)
+                ft = jnp.minimum(need - dt, accc)
+                out2, total2, bank2, head2, count2 = _emit_and_bank(
+                    out, total, state["bank"],
+                    state["bank_head"], state["bank_count"],
+                    cols, dt, ft, accc, cap, C, W)
+                shortfall = need - dt - ft
+                # dead-piece bookkeeping (same rules as the host twin):
+                # stray picks on dead pieces are dropped; a live piece that
+                # keeps a target but yields nothing for dead_rounds rounds
+                # is empty in reality (estimation noise) — drop it
+                dropped = jnp.sum(jnp.where(state["dead"], shortfall, 0))
+                shortfall = jnp.where(state["dead"], 0, shortfall)
+                trig = (shortfall > 0) & (accc == 0) & (count2 == 0)
+                streak = jnp.where(state["dead"], state["streak"],
+                                   jnp.where(trig, state["streak"] + 1, 0))
+                newly = ~state["dead"] & (streak >= dead_rounds)
+                dropped = dropped + jnp.sum(jnp.where(newly, shortfall, 0))
+                shortfall = jnp.where(newly, 0, shortfall)
+                stats2 = stats + jnp.stack(
+                    [jnp.int32(bt), jnp.int32(bt),
+                     (jnp.sum(okc) - jnp.sum(resc)
+                      - jnp.sum(accc)).astype(jnp.int32),
+                     jnp.sum(resc).astype(jnp.int32),
+                     dropped.astype(jnp.int32)])
+                state2 = {"key": key,
+                          "owed": shortfall.astype(jnp.int32),
+                          "dead": state["dead"] | newly,
+                          "streak": streak.astype(jnp.int32),
+                          "bank": bank2,
+                          "bank_head": head2.astype(jnp.int32),
+                          "bank_count": count2.astype(jnp.int32)}
+                # `bad` (unreachable cover) is terminal: the loop exits on
+                # `fail` and the host raises, discarding the buffers — no
+                # need to gate the state updates (which would force a full
+                # copy of the banks + output every round)
+                return (state2, out2, total2, rounds + 1,
+                        fail | bad, stats2)
+
+            init = (state, out, jnp.int32(0), jnp.int32(0),
+                    jnp.bool_(False), jnp.zeros(5, jnp.int32))
+            return jax.lax.while_loop(cond, body, init)
+
+        return jax.jit(loop_fn, donate_argnums=(0, 1))
+
+    def _loop_for(self, C: int):
+        fn = self._loop_cache.get(C)
+        if fn is None:
+            fn = self._build_loop(C)
+            self._loop_cache[C] = fn
+        return fn
+
+    def sample_async(self, n: int):
+        """Dispatch a full ``sample(n)`` without blocking; returns a handle
+        whose ``result()`` fetches the answer.  Device mode dispatches the
+        persistent loop (JAX async dispatch) so the serving path can launch
+        call *k+1* before draining call *k*; host mode computes eagerly and
+        returns a ready handle."""
+        from ..union_sampler import empty_sample_set
+        if n <= 0:
+            return _ReadyHandle(empty_sample_set(list(self.attrs),
+                                                 self.stats))
+        if self.fused_rounds == "host":
+            return _ReadyHandle(self._sample_host(n))
+        self._ensure_device_inputs()
+        C = 1 << max(10, (int(n) - 1).bit_length())
+        if self._dev_state is None:
+            self._dev_state = self._init_state()
+        out = self._out_buffer(C)
+        st, out, total, rounds, fail, stats = self._loop_for(C)(
+            self._dev_state, out, jnp.int32(n), self._probs_base)
+        self._dev_state = st
+        # the output shuffle is host randomness, drawn at dispatch time so
+        # both modes consume host_rng identically (one permutation per call)
+        shuffle = self.host_rng.permutation(n)
+        return _PendingSample(self, n, out, total, rounds, fail, stats,
+                              shuffle)
+
+    def _out_buffer(self, C: int):
+        """Fresh output buffer for one device-loop call (donated away)."""
+        return jnp.zeros((C, len(self.attrs) + 1), jnp.int32)
+
+    def _merge_out(self, out) -> np.ndarray:
+        """Collapse a fetched output buffer to one ``(C, A+1)`` matrix
+        (the sharded loop returns one disjointly-filled buffer per shard)."""
+        return np.asarray(out)
 
     def sample(self, n: int):
+        if self.fused_rounds == "host":
+            return self._sample_host(n)
+        return self.sample_async(n).result()
+
+    # -- host twin loop (fused_rounds="host") ---------------------------------
+    def _sample_host(self, n: int):
+        """Host-driven round loop with numpy twin banks.
+
+        Same round program, same PRNG discipline, same banking semantics as
+        the device loop — one device sync per round instead of one per call.
+        Kept for parity testing (the device loop is pinned bit-equal to
+        this) and as the debugging fallback."""
         from ..union_sampler import SampleSet, empty_sample_set
         if n <= 0:
             return empty_sample_set(list(self.attrs), self.stats)
-        nj = len(self.order)
-        base = np.maximum(np.asarray(self.cover.selection_probs(), np.float64), 0)
-        streak, dead = self._streak, self._dead
-        parts: List[Rows] = []
-        homes: List[np.ndarray] = []
+        self._ensure_device_inputs()
+        nj, cap = len(self.order), self.surplus_cap
+        if self._h_bank is None:
+            self._h_bank = np.zeros((nj, cap, len(self.attrs) + 1),
+                                    np.int32)
+        bank, head, count = self._h_bank, self._h_head, self._h_count
+        dead, streak = self._h_dead, self._h_streak
+        bt = int(sum(self.piece_batches))
+        parts: List[np.ndarray] = []      # (k, A+1) rows + home matrices
         owed = np.zeros(nj, dtype=np.int64)   # per-piece carried shortfall
         total = 0
         rounds = 0
@@ -769,87 +1160,64 @@ class JaxUnionSampler:
             rounds += 1
             if rounds > self.max_rounds:
                 raise RuntimeError("JaxUnionSampler: top-up budget exhausted")
-            p = base.copy()
-            for j in dead:
-                p[j] = 0.0
-            s = p.sum()
-            if s <= 0:
-                raise RuntimeError("all cover pieces unreachable")
-            p /= s
-            # assign banked surplus to fresh targets (host multinomial — the
-            # same selection law; piece counts stay multinomial under p)
-            bank_total = int(self._bank_n.sum())
-            unassigned = n - total - int(owed.sum())
-            if bank_total > 0 and unassigned > 0:
-                owed += self.host_rng.multinomial(min(unassigned, bank_total), p)
-            # serve carried per-piece targets from the surplus bank first
-            for j in range(nj):
-                if owed[j] and self._bank_n[j]:
-                    got = self._drain_bank(j, int(owed[j]), parts, homes)
-                    owed[j] -= got
-                    total += got
-            if total >= n:
-                break
-            unassigned = n - total - int(owed.sum())
-            extra = max(0, min(unassigned, self.round_batch))
+            extra = max(0, min(n - total - int(owed.sum()), self.round_batch))
             self.key, sub = jax.random.split(self.key)
-            (out_cols, ok_counts, res_counts, acc_counts, take,
-             shortfall) = self._round_jit(
-                jnp.asarray(np.cumsum(p), jnp.float32),
-                jnp.asarray(np.minimum(owed, np.iinfo(np.int32).max),
-                            jnp.int32),
-                jnp.int32(extra), sub)
-            ok_counts = np.asarray(ok_counts)
-            res_counts = np.asarray(res_counts)
-            acc_counts = np.asarray(acc_counts)
-            take = np.asarray(take)
-            shortfall = np.asarray(shortfall)
-            self.stats.iterations += self.round_batch * nj
-            self.stats.candidate_draws += self.round_batch * nj
+            cols, okc, resc, accc, need, bad = self._round_jit(
+                self._probs_base, jnp.asarray(dead),
+                jnp.asarray(owed.astype(np.int32)), jnp.int32(extra), sub)
+            if bool(np.asarray(bad)):
+                raise RuntimeError("all cover pieces unreachable")
+            okc = np.asarray(okc).astype(np.int64)
+            resc = np.asarray(resc).astype(np.int64)
+            accc = np.asarray(accc).astype(np.int64)
+            need = np.asarray(need).astype(np.int64)
+            self.stats.iterations += bt
+            self.stats.candidate_draws += bt
             # residual (§8.2) and membership rejections are accounted
             # separately (dead walks are neither)
-            self.stats.residual_rejects += int(res_counts.sum())
-            self.stats.cover_rejects += int(ok_counts.sum() - res_counts.sum()
-                                            - acc_counts.sum())
+            self.stats.residual_rejects += int(resc.sum())
+            self.stats.cover_rejects += int(okc.sum() - resc.sum()
+                                            - accc.sum())
+            dt = np.minimum(np.minimum(need, count), self._drain_w)
+            ft = np.minimum(need - dt, accc)
             for j in range(nj):
-                t = int(take[j])
-                a_j = int(acc_counts[j])
-                if t:
-                    cols = out_cols[j]
-                    parts.append({a: np.asarray(c)[:t].astype(np.int64)
-                                  for a, c in zip(self.attrs, cols)})
-                    homes.append(np.full(t, j, dtype=np.int64))
-                    total += t
-                # bank the surplus accepted candidates for later targets
-                if a_j > t and self._bank_n[j] < self.surplus_cap:
-                    cols = out_cols[j]
-                    self._bank[j].append(
-                        {a: np.asarray(c)[t:a_j].astype(np.int64)
-                         for a, c in zip(self.attrs, cols)})
-                    self._bank_n[j] += a_j - t
-            owed = shortfall.astype(np.int64)
-            # dead-piece detection: a piece that keeps a target but never
-            # accepts is empty in reality (estimation noise) — drop it.
-            for j in range(nj):
-                if j in dead:
-                    # float32-cumsum clipping can still assign stray picks to
-                    # a dead piece; return them to the unassigned pool
-                    if owed[j]:
-                        self.stats.dropped_slots += int(owed[j])
-                        owed[j] = 0
-                    continue
-                if owed[j] > 0 and acc_counts[j] == 0 and self._bank_n[j] == 0:
-                    streak[j] += 1
-                    if streak[j] >= self.dead_rounds:
-                        dead.add(j)
-                        self.stats.dropped_slots += int(owed[j])
-                        owed[j] = 0
-                else:
-                    streak[j] = 0
-        rows = {a: np.concatenate([g[a] for g in parts])[:n] for a in self.attrs}
-        home = np.concatenate(homes)[:n]
+                if dt[j]:
+                    idx = (head[j] + np.arange(dt[j])) % cap
+                    parts.append(bank[j, idx])
+                cj = None
+                if ft[j]:
+                    cj = np.asarray(cols[j])
+                    parts.append(cj[:ft[j]])
+                # push surplus accepts at the ring tail (invariant under
+                # the take: tail = head + count before both operations)
+                push = int(min(accc[j] - ft[j], cap - (count[j] - dt[j])))
+                if push > 0:
+                    if cj is None:
+                        cj = np.asarray(cols[j])
+                    pidx = (head[j] + count[j] + np.arange(push)) % cap
+                    bank[j, pidx] = cj[ft[j]:ft[j] + push]
+                head[j] = (head[j] + dt[j]) % cap
+                count[j] = count[j] - dt[j] + push
+            total += int((dt + ft).sum())
+            shortfall = need - dt - ft
+            # dead-piece bookkeeping — identical rules to the device loop
+            self.stats.dropped_slots += int(shortfall[dead].sum())
+            shortfall[dead] = 0
+            trig = (shortfall > 0) & (accc == 0) & (count == 0)
+            streak[:] = np.where(dead, streak,
+                                 np.where(trig, streak + 1, 0))
+            newly = ~dead & (streak >= self.dead_rounds)
+            self.stats.dropped_slots += int(shortfall[newly].sum())
+            shortfall[newly] = 0
+            dead |= newly
+            owed = shortfall
+        self.last_rounds = rounds
+        mat = np.concatenate(parts)[:n].astype(np.int64)
         shuffle = self.host_rng.permutation(n)
-        rows = {a: c[shuffle] for a, c in rows.items()}
+        mat = mat[shuffle]
+        rows = {a: np.ascontiguousarray(mat[:, i])
+                for i, a in enumerate(self.attrs)}
+        home = np.ascontiguousarray(mat[:, -1])
         from ..relation import fingerprint128
         fp = fingerprint128([rows[a] for a in sorted(self.attrs)])
-        return SampleSet(list(self.attrs), rows, home[shuffle], fp, self.stats)
+        return SampleSet(list(self.attrs), rows, home, fp, self.stats)

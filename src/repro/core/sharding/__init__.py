@@ -14,10 +14,11 @@ from .catalog import (SHARD_AXIS, ShardedCatalog, ShardedMembership,
                       ShardedTreeJoin, make_sampler_mesh, partition_of_fp32,
                       row_range_bounds)
 from .sampler import ShardedUnionSampler
-from .stats import merge_moment_stack, psum_merge_moments
+from .stats import merge_moment_stack, psum_counters, psum_merge_moments
 
 __all__ = [
     "SHARD_AXIS", "ShardedCatalog", "ShardedMembership", "ShardedTreeJoin",
     "ShardedUnionSampler", "make_sampler_mesh", "merge_moment_stack",
-    "partition_of_fp32", "psum_merge_moments", "row_range_bounds",
+    "partition_of_fp32", "psum_counters", "psum_merge_moments",
+    "row_range_bounds",
 ]

@@ -10,6 +10,14 @@ statistics from many shards combine into one global estimate with a single
 with ``mesh=``), :func:`merge_moment_stack` the host-side reference the tests
 compare against (and :func:`repro.core.distributed.merge_statistics`'s device
 twin).
+
+Counters have the same algebra with a plain sum: :func:`psum_counters` merges
+per-shard ``SamplerStats``-style counter vectors across the mesh — the
+on-device analogue of :meth:`repro.core.union_sampler.SamplerStats.merge`.
+The sharded union loop itself derives its global counters from the one
+``all_gather`` its water-filling banking already performs (DESIGN.md §4a), so
+it needs no second collective; ``psum_counters`` is the standalone form for
+programs where only counters cross the mesh.
 """
 
 from __future__ import annotations
@@ -38,6 +46,17 @@ def psum_merge_moments(n: jnp.ndarray, mean: jnp.ndarray, m2: jnp.ndarray,
     gmean = jax.lax.psum(nf * mean, axis_name) / totalf
     gm2 = jax.lax.psum(m2 + nf * (mean - gmean) ** 2, axis_name)
     return total, gmean, gm2
+
+
+def psum_counters(vec: jnp.ndarray, axis_name: str) -> jnp.ndarray:
+    """Merge per-shard int counter vectors across a mesh axis (one ``psum``).
+
+    Counter merges are plain sums (associative and order-free), so the
+    collective form is trivial — this exists so callers state the intent
+    (``SamplerStats``-vector merge) rather than a bare ``psum``, mirroring
+    :func:`psum_merge_moments` for the moment triples.
+    """
+    return jax.lax.psum(vec, axis_name)
 
 
 def merge_moment_stack(n: jnp.ndarray, mean: jnp.ndarray, m2: jnp.ndarray

@@ -120,6 +120,16 @@ def empty_sample_set(attrs: Sequence[str], stats: SamplerStats) -> SampleSet:
     return SampleSet(list(attrs), rows, np.zeros(0, dtype=np.int64), fp, stats)
 
 
+class ReadySample:
+    """Resolved async-sample handle (host engines compute eagerly)."""
+
+    def __init__(self, ss: SampleSet):
+        self._ss = ss
+
+    def result(self) -> SampleSet:
+        return self._ss
+
+
 class DisjointUnionSampler:
     """Definition 1 — sampling the disjoint union ⨄ J_j."""
 
@@ -234,7 +244,8 @@ class SetUnionSampler:
                  seed: int = 0, retry_rounds: int = 64,
                  candidate_batch: int = 32, predicate=None,
                  backend: str | Backend = "numpy",
-                 round_batch: int = 4096, mesh=None):
+                 round_batch: int = 4096, mesh=None,
+                 fused_rounds: str = "device"):
         if membership not in ("probe", "record"):
             raise ValueError("membership must be 'probe' or 'record'")
         self.cat = cat
@@ -284,12 +295,12 @@ class SetUnionSampler:
                                       backend=self.backend)
                 self._engine = ShardedUnionSampler(
                     scat, cover, seed=seed, round_batch=round_batch,
-                    stats=self.stats)
+                    stats=self.stats, fused_rounds=fused_rounds)
             else:
                 from .backends.jax_backend import JaxUnionSampler
                 self._engine = JaxUnionSampler(
                     self.backend, cover, seed=seed, round_batch=round_batch,
-                    stats=self.stats)
+                    stats=self.stats, fused_rounds=fused_rounds)
 
     # ------------------------------------------------------------------ util
     @property
@@ -336,6 +347,20 @@ class SetUnionSampler:
         if self.membership == "probe" and not self.strict_paper_loop:
             return self._sample_probe(n)
         return self._sample_sequential(n)
+
+    def sample_async(self, n: int):
+        """Dispatch ``sample(n)`` without blocking on the result.
+
+        With a fused device engine the whole multi-round loop is dispatched
+        (JAX async dispatch) and the returned handle's ``result()`` performs
+        the single device→host fetch — the serving path uses this to launch
+        batch *k+1* before draining batch *k*.  Host engines compute eagerly
+        and return an already-resolved handle.
+        """
+        if self._engine is not None and hasattr(self._engine,
+                                                "sample_async"):
+            return self._engine.sample_async(n)
+        return ReadySample(self.sample(n))
 
     # -- exact mode: batched, stateless, provably uniform ---------------------
     def _sample_probe(self, n: int) -> SampleSet:

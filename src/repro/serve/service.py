@@ -93,9 +93,27 @@ class SampleService:
 
     # -------------------------------------------------------------- producer
     def _produce(self, sampler) -> None:
+        """Keep the queue warm with ``batch``-sized sample sets.
+
+        Engines exposing ``sample_async`` get double-buffered round
+        dispatch: batch *k+1* is launched before batch *k* is drained, so
+        the host-side assembly (fetch, shuffle, fingerprint) of one batch
+        hides behind the device compute of the next — the fused device
+        loop's top-up latency never stalls the queue.  Plain engines fall
+        back to the synchronous path.
+        """
+        dispatch = getattr(sampler, "sample_async", None)
+        pending = None
         while not self._stop.is_set():
             try:
-                ss = sampler.sample(self.batch)
+                if dispatch is None:
+                    ss = sampler.sample(self.batch)
+                else:
+                    if pending is None:
+                        pending = dispatch(self.batch)
+                    nxt = dispatch(self.batch)     # in flight while we drain
+                    ss = pending.result()
+                    pending = nxt
             except BaseException as e:        # surfaced on the next request
                 self._error = e
                 self._stop.set()
