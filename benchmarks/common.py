@@ -71,16 +71,48 @@ def bench_meta() -> Dict:
     return meta
 
 
+HISTORY_CAP = 100       # appended runs kept per BENCH_*.json file
+
+
+def _load_history(path: str) -> List[Dict]:
+    """Prior runs from an existing BENCH file (migrating legacy layouts)."""
+    try:
+        with open(path) as f:
+            prev = json.load(f)
+    except Exception:
+        return []
+    history = list(prev.get("history", []))
+    if not history and prev.get("records"):
+        # legacy clobber-style file: keep its one run as the first entry
+        history = [{"ts": None,
+                    "git_sha": prev.get("meta", {}).get("git_sha", "unknown"),
+                    "meta": prev.get("meta", {}),
+                    "records": prev.get("records", [])}]
+    return history
+
+
 def write_json(path: Optional[str], records: Optional[List[Dict]] = None,
                **extra_meta) -> None:
-    """Persist ``records`` (default: the global RECORDS) plus meta to PATH."""
+    """Persist ``records`` (default: the global RECORDS) plus meta to PATH.
+
+    Appends rather than clobbers: each call adds one timestamped,
+    git-sha-stamped run to the file's ``history`` list (capped at
+    ``HISTORY_CAP``), while the latest run stays under ``records``/``meta``
+    for consumers that only want the freshest numbers.
+    """
     if not path:
         return
-    payload = {
-        "meta": {**bench_meta(), **extra_meta},
-        "records": list(RECORDS if records is None else records),
-    }
+    meta = {**bench_meta(), **extra_meta}
+    recs = list(RECORDS if records is None else records)
+    run = {"ts": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+           "git_sha": meta.get("git_sha", "unknown"),
+           "meta": meta, "records": recs}
+    history = _load_history(path) if os.path.exists(path) else []
+    history.append(run)
+    payload = {"meta": meta, "records": recs,
+               "history": history[-HISTORY_CAP:]}
     with open(path, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True)
         f.write("\n")
-    print(f"wrote {path} ({len(payload['records'])} records)", flush=True)
+    print(f"wrote {path} ({len(recs)} records, "
+          f"{len(payload['history'])} runs in history)", flush=True)

@@ -1,7 +1,13 @@
-"""Fig 6a/6b: ONLINE-UNION with sample reuse vs without."""
+"""Fig 6a/6b: ONLINE-UNION with sample reuse vs without.
+
+Also dumps the φ-refinement trajectory (``OnlineUnionSampler.trace``): one
+``# phi-trace`` JSON line per workload with the refresh/backtrack history,
+plus a structured record when ``--json`` is given.
+"""
 
 from __future__ import annotations
 
+import json
 import time
 
 from repro.core.framework import estimate_union, warmup
@@ -9,7 +15,25 @@ from repro.core.online import OnlineUnionSampler
 from repro.core.union_sampler import SetUnionSampler
 from repro.data.workloads import uq1, uq2, uq3
 
-from .common import emit
+from .common import emit, record
+
+
+def _dump_trace(tag, ou):
+    """Print + record the φ-trajectory the sampler used to throw away."""
+    refreshes = ou.trace.events("refresh")
+    summary = {
+        "workload": tag,
+        "refreshes": ou.refresh_count,
+        "last_refresh_at": ou.last_refresh_at,
+        "backtrack_removed": ou.backtrack_count,
+        "union_size": [e["union_size"] for e in refreshes],
+        "hist_gap": refreshes[-1]["hist_gap"] if refreshes else {},
+        "confident": refreshes[-1]["confident"] if refreshes else False,
+    }
+    print(f"# phi-trace {json.dumps(summary, sort_keys=True)}", flush=True)
+    record(f"fig6_{tag}_phi_trace", **summary,
+           events=[{k: v for k, v in e.items() if k != "piece_sizes"}
+                   for e in refreshes[-8:]])
 
 
 def run_wl(tag, wl, n):
@@ -30,15 +54,26 @@ def run_wl(tag, wl, n):
     emit(f"fig6_{tag}_no_reuse", t_plain / n * 1e6, "")
     emit(f"fig6_{tag}_reuse", t_reuse / n * 1e6,
          f"reuse_accepts={ss.stats.reuse_accepts};speedup={t_plain/max(t_reuse,1e-9):.2f}x")
+    _dump_trace(tag, ou)
 
 
-def main(small: bool = True) -> None:
+def main(small: bool = True, json_path: str = None) -> None:
     n = 500 if small else 5000
     scale = 0.05 if small else 0.3
     run_wl("uq1", uq1(scale=scale, overlap=0.3, n_joins=3), n)
     run_wl("uq2", uq2(scale=scale), n)
     run_wl("uq3", uq3(scale=scale, overlap=0.3), n)
+    if json_path:
+        from .common import write_json
+        write_json(json_path, bench="reuse")
 
 
 if __name__ == "__main__":
-    main(small=False)
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--small", action="store_true")
+    ap.add_argument("--json", default=None,
+                    help="append a run (records + phi traces) to this "
+                         "BENCH json file")
+    a = ap.parse_args()
+    main(small=a.small, json_path=a.json)

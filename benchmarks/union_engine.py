@@ -149,6 +149,31 @@ def run(args) -> int:
             record(f"{tag}_device_rb4096", engine="device", round_batch=4096,
                    workload=tag, **m)
 
+    # telemetry overhead: identical device engine, obs on vs forced off.
+    # Per-piece counters ride in the jitted carry either way (parity), so
+    # this isolates the host-side cost (timers + registry folds) — the
+    # acceptance bar is within 3%.
+    from repro import obs
+    rb = max(args.rb_sweep)
+    m_on = _measure(_engine(wl2, cover2, "device", rb, seed=6), n,
+                    args.repeats, rb)
+    obs.set_enabled(False)
+    try:
+        m_off = _measure(_engine(wl2, cover2, "device", rb, seed=6), n,
+                         args.repeats, rb)
+    finally:
+        obs.set_enabled(None)
+    overhead = (m_off["samples_per_s"] / max(m_on["samples_per_s"], 1e-9)
+                - 1.0)
+    emit("union_engine_obs_overhead", 0.0,
+         f"obs_on={m_on['samples_per_s']:,.0f}/s "
+         f"obs_off={m_off['samples_per_s']:,.0f}/s "
+         f"overhead={overhead * 100:.1f}%")
+    record("obs_overhead", workload="uq1x2", round_batch=rb,
+           samples_per_s_obs_on=m_on["samples_per_s"],
+           samples_per_s_obs_off=m_off["samples_per_s"],
+           overhead_pct=overhead * 100)
+
     write_json(args.json, bench="union_engine", scale=args.scale)
 
     if args.require_device_speedup:

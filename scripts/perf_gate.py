@@ -1,0 +1,118 @@
+#!/usr/bin/env python
+"""Perf-regression gate over BENCH_union JSON trajectories.
+
+Compares the latest run's ``samples_per_s`` records against the committed
+baseline (``benchmarks/perf_baseline.json``) within a relative tolerance
+band (default ±30%):
+
+* a record **slower** than ``baseline * (1 - tol)`` fails the gate (exit 1);
+* a record **faster** than ``baseline * (1 + tol)`` prints a notice — the
+  machine got quicker or the engine did; refresh the baseline with
+  ``--update`` so the band keeps teeth;
+* records missing from either side are reported but don't fail (workload
+  coverage changes between smoke and full runs).
+
+Usage:
+    python scripts/perf_gate.py BENCH_union_smoke.json
+    python scripts/perf_gate.py BENCH_union_smoke.json --update   # rebaseline
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+DEFAULT_BASELINE = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "benchmarks", "perf_baseline.json")
+
+
+def latest_rates(bench_path: str) -> dict:
+    """``{record_name: samples_per_s}`` from a BENCH file's latest run."""
+    with open(bench_path) as f:
+        payload = json.load(f)
+    records = payload.get("records", [])
+    return {r["name"]: float(r["samples_per_s"]) for r in records
+            if "samples_per_s" in r}
+
+
+def update_baseline(bench_path: str, baseline_path: str) -> int:
+    rates = latest_rates(bench_path)
+    if not rates:
+        print(f"perf_gate: no samples_per_s records in {bench_path}")
+        return 1
+    with open(bench_path) as f:
+        meta = json.load(f).get("meta", {})
+    with open(baseline_path, "w") as f:
+        json.dump({"meta": {"source": os.path.basename(bench_path),
+                            "git_sha": meta.get("git_sha", "unknown"),
+                            "platform": meta.get("platform"),
+                            "device_count": meta.get("device_count")},
+                   "baselines": rates}, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"perf_gate: wrote baseline {baseline_path} "
+          f"({len(rates)} records)")
+    return 0
+
+
+def gate(bench_path: str, baseline_path: str, tol: float) -> int:
+    rates = latest_rates(bench_path)
+    try:
+        with open(baseline_path) as f:
+            base = json.load(f).get("baselines", {})
+    except FileNotFoundError:
+        print(f"perf_gate: no baseline at {baseline_path}; "
+              "run with --update to create one (gate skipped)")
+        return 0
+    common = sorted(set(rates) & set(base))
+    if not common:
+        print("perf_gate: no overlapping records between run and baseline "
+              "(gate skipped)")
+        return 0
+    failures, notices = [], []
+    for name in common:
+        got, want = rates[name], base[name]
+        ratio = got / want if want > 0 else float("inf")
+        status = "ok"
+        if ratio < 1.0 - tol:
+            status = "SLOW"
+            failures.append(name)
+        elif ratio > 1.0 + tol:
+            status = "fast"
+            notices.append(name)
+        print(f"  {name}: {got:,.0f}/s vs baseline {want:,.0f}/s "
+              f"({ratio:.2f}x) [{status}]")
+    for name in sorted(set(rates) - set(base)):
+        print(f"  {name}: {rates[name]:,.0f}/s (no baseline — skipped)")
+    for name in sorted(set(base) - set(rates)):
+        print(f"  {name}: in baseline but not in this run")
+    if notices:
+        print(f"perf_gate: NOTICE — {len(notices)} record(s) >"
+              f"{tol:.0%} faster than baseline; consider "
+              f"`python scripts/perf_gate.py {bench_path} --update`")
+    if failures:
+        print(f"perf_gate: FAIL — {len(failures)} record(s) more than "
+              f"{tol:.0%} slower than baseline: {', '.join(failures)}")
+        return 1
+    print(f"perf_gate: PASS ({len(common)} records within ±{tol:.0%})")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("bench", help="BENCH_*.json produced by the bench CLI")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE)
+    ap.add_argument("--tolerance", type=float, default=0.30,
+                    help="relative band around the baseline (default 0.30)")
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the baseline from this run instead of "
+                         "gating")
+    args = ap.parse_args(argv)
+    if args.update:
+        return update_baseline(args.bench, args.baseline)
+    return gate(args.bench, args.baseline, args.tolerance)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

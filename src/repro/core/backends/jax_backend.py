@@ -51,14 +51,17 @@ candidate draws with a single warning instead of rejecting the whole union.
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
+import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ... import obs
 from ..index import Catalog
 from ..join_sampler import EmptyJoinError, JoinSampler
 from ..joins import JoinSpec
@@ -694,6 +697,22 @@ class JaxBackend(Backend):
 _STAT_FIELDS = ("iterations", "candidate_draws", "cover_rejects",
                 "residual_rejects", "dropped_slots")
 
+# Per-piece round counters carried as one (nj, 5) int32 matrix in the
+# persistent loop (device mode) / accumulated by the numpy twin (host mode)
+# and surfaced at the same single host sync as the scalar stats vector.
+# Columns: candidate draws, cover-accepted rows, §8.2 residual rejections,
+# rows drained from the surplus bank, and the post-round bank-occupancy
+# high-water mark (max over the call; folded with max across calls).
+PIECE_STAT_FIELDS = ("draws", "accepts", "residual_rejects",
+                     "bank_drained", "bank_hwm")
+
+
+def _dispatch_annotation():
+    """Host-side profiler annotation around loop dispatch (REPRO_OBS_TRACE)."""
+    if obs.trace_annotations_enabled():
+        return jax.profiler.TraceAnnotation("repro/sample_dispatch")
+    return contextlib.nullcontext()
+
 
 def _cover_cum(probs_base: jnp.ndarray, dead: jnp.ndarray):
     """Dead-masked, renormalised selection CDF + unreachable flag.
@@ -807,7 +826,7 @@ class _PendingSample:
     """
 
     def __init__(self, sampler, n, out, total, rounds, fail,
-                 stats_vec, shuffle):
+                 stats_vec, piece_vec, shuffle):
         self._sampler = sampler
         self._n = int(n)
         self._out = out
@@ -815,6 +834,7 @@ class _PendingSample:
         self._rounds = rounds
         self._fail = fail
         self._stats_vec = stats_vec
+        self._piece_vec = piece_vec
         self._shuffle = shuffle
         self._done = None
 
@@ -822,6 +842,7 @@ class _PendingSample:
         if self._done is not None:
             return self._done
         s = self._sampler
+        t0 = time.perf_counter() if obs.enabled() else 0.0
         if bool(np.asarray(self._fail)):
             raise RuntimeError("all cover pieces unreachable")
         total = int(np.asarray(self._total))
@@ -831,6 +852,8 @@ class _PendingSample:
         vec = np.asarray(self._stats_vec)
         for f, v in zip(_STAT_FIELDS, vec):
             setattr(s.stats, f, getattr(s.stats, f) + int(v))
+        s._fold_piece_stats(np.asarray(self._piece_vec),
+                            rounds=s.last_rounds, samples=self._n)
         mat = s._merge_out(self._out)[:self._n].astype(np.int64)[
             self._shuffle]
         rows = {a: np.ascontiguousarray(mat[:, i])
@@ -840,6 +863,8 @@ class _PendingSample:
         from ..union_sampler import SampleSet
         fp = fingerprint128([rows[a] for a in sorted(s.attrs)])
         self._done = SampleSet(list(s.attrs), rows, home, fp, s.stats)
+        if obs.enabled():
+            s._obs_drain_hist().observe(time.perf_counter() - t0)
         return self._done
 
 
@@ -923,6 +948,12 @@ class JaxUnionSampler:
         # drains them just as fast while the wide one mostly moves padding.
         self._drain_w = min(self.round_batch, 256)
         self.last_rounds = 0
+        # per-piece telemetry (PIECE_STAT_FIELDS columns): counters sum
+        # across sample() calls, the bank high-water column folds with max.
+        # Filled once per call at the single host sync in both loop modes.
+        self.piece_stats = np.zeros((len(self.order),
+                                     len(PIECE_STAT_FIELDS)), np.int64)
+        self._obs_metrics = None
         self._round_jit = jax.jit(self._round_impl)
         # persistent device-loop state (fused_rounds="device"): PRNG key,
         # shortfall vector, ring banks and dead-piece flags all live on
@@ -953,6 +984,12 @@ class JaxUnionSampler:
         wrapper and the device loop body).  Returns per join the
         accepted-compacted candidate columns plus (ok, residual, accepted)
         counts and the per-piece need = carry + this round's targets."""
+        with jax.named_scope("algo1_fused_round"):
+            return self._round_core_impl(key, probs_cum, carry_need,
+                                         extra_target)
+
+    def _round_core_impl(self, key: jax.Array, probs_cum: jnp.ndarray,
+                         carry_need: jnp.ndarray, extra_target: jnp.ndarray):
         nj = len(self.trees)
         # resolved at trace time (first round): keeps the lazy backend
         # membership unbuilt for subclasses that override the round program
@@ -1026,13 +1063,15 @@ class JaxUnionSampler:
         max_rounds = jnp.int32(self.max_rounds)
         dead_rounds = jnp.int32(self.dead_rounds)
 
+        pbatch = jnp.asarray(self.piece_batches, jnp.int32)
+
         def loop_fn(state, out, n, probs_base):
             def cond(c):
-                _s, _o, total, rounds, fail, _st = c
+                total, rounds, fail = c[2], c[3], c[4]
                 return (total < n) & (rounds < max_rounds) & ~fail
 
             def body(c):
-                state, out, total, rounds, fail, stats = c
+                state, out, total, rounds, fail, stats, pstats = c
                 probs_cum, bad = _cover_cum(probs_base, state["dead"])
                 key, kround = jax.random.split(state["key"])
                 extra = jnp.clip(n - total - jnp.sum(state["owed"]),
@@ -1066,6 +1105,16 @@ class JaxUnionSampler:
                       - jnp.sum(accc)).astype(jnp.int32),
                      jnp.sum(resc).astype(jnp.int32),
                      dropped.astype(jnp.int32)])
+                # per-piece telemetry rides the same carry (PIECE_STAT_FIELDS
+                # columns); pure extra outputs — nothing feeds back into the
+                # sampling arithmetic, so the emitted stream is unchanged
+                pstats2 = jnp.stack(
+                    [pstats[:, 0] + pbatch,
+                     pstats[:, 1] + accc,
+                     pstats[:, 2] + resc,
+                     pstats[:, 3] + dt.astype(jnp.int32),
+                     jnp.maximum(pstats[:, 4], count2.astype(jnp.int32))],
+                    axis=1)
                 state2 = {"key": key,
                           "owed": shortfall.astype(jnp.int32),
                           "dead": state["dead"] | newly,
@@ -1078,10 +1127,12 @@ class JaxUnionSampler:
                 # need to gate the state updates (which would force a full
                 # copy of the banks + output every round)
                 return (state2, out2, total2, rounds + 1,
-                        fail | bad, stats2)
+                        fail | bad, stats2, pstats2)
 
             init = (state, out, jnp.int32(0), jnp.int32(0),
-                    jnp.bool_(False), jnp.zeros(5, jnp.int32))
+                    jnp.bool_(False), jnp.zeros(5, jnp.int32),
+                    jnp.zeros((len(self.order), len(PIECE_STAT_FIELDS)),
+                              jnp.int32))
             return jax.lax.while_loop(cond, body, init)
 
         return jax.jit(loop_fn, donate_argnums=(0, 1))
@@ -1105,19 +1156,23 @@ class JaxUnionSampler:
                                                  self.stats))
         if self.fused_rounds == "host":
             return _ReadyHandle(self._sample_host(n))
+        t0 = time.perf_counter() if obs.enabled() else 0.0
         self._ensure_device_inputs()
         C = 1 << max(10, (int(n) - 1).bit_length())
         if self._dev_state is None:
             self._dev_state = self._init_state()
         out = self._out_buffer(C)
-        st, out, total, rounds, fail, stats = self._loop_for(C)(
-            self._dev_state, out, jnp.int32(n), self._probs_base)
+        with _dispatch_annotation():
+            st, out, total, rounds, fail, stats, pstats = self._loop_for(C)(
+                self._dev_state, out, jnp.int32(n), self._probs_base)
         self._dev_state = st
         # the output shuffle is host randomness, drawn at dispatch time so
         # both modes consume host_rng identically (one permutation per call)
         shuffle = self.host_rng.permutation(n)
+        if obs.enabled():
+            self._obs_dispatch_hist().observe(time.perf_counter() - t0)
         return _PendingSample(self, n, out, total, rounds, fail, stats,
-                              shuffle)
+                              pstats, shuffle)
 
     def _out_buffer(self, C: int):
         """Fresh output buffer for one device-loop call (donated away)."""
@@ -1132,6 +1187,75 @@ class JaxUnionSampler:
         if self.fused_rounds == "host":
             return self._sample_host(n)
         return self.sample_async(n).result()
+
+    # -- telemetry surfacing (repro.obs) --------------------------------------
+    def piece_stats_dict(self) -> Dict[str, Dict[str, int]]:
+        """Cumulative per-piece round counters keyed by join name
+        (PIECE_STAT_FIELDS columns; ``bank_hwm`` is a high-water mark)."""
+        return {name: {f: int(self.piece_stats[j, i])
+                       for i, f in enumerate(PIECE_STAT_FIELDS)}
+                for j, name in enumerate(self.order)}
+
+    def _obs_handles(self):
+        """Lazily bound metric children (one registry lookup per engine)."""
+        if self._obs_metrics is None:
+            reg = obs.get_registry()
+            per_piece = [
+                reg.counter("repro_engine_piece_draws_total",
+                            "candidate draws per cover piece", ("join",)),
+                reg.counter("repro_engine_piece_accepts_total",
+                            "cover-accepted candidates per piece", ("join",)),
+                reg.counter("repro_engine_piece_residual_rejects_total",
+                            "§8.2 residual rejections per piece", ("join",)),
+                reg.counter("repro_engine_piece_bank_drained_total",
+                            "rows served from the surplus bank", ("join",)),
+            ]
+            self._obs_metrics = {
+                "piece": [[c.labels(join=n) for c in per_piece]
+                          for n in self.order],
+                "hwm": reg.gauge("repro_engine_piece_bank_hwm",
+                                 "surplus-bank occupancy high-water mark",
+                                 ("join",)),
+                "rounds": reg.counter("repro_engine_rounds_total",
+                                      "fused Algorithm-1 rounds run"),
+                "samples": reg.counter("repro_engine_samples_total",
+                                       "samples emitted by the fused loop"),
+                "dispatch": reg.histogram(
+                    "repro_engine_dispatch_seconds",
+                    "host wall-clock of sample(n) loop dispatch"),
+                "drain": reg.histogram(
+                    "repro_engine_drain_seconds",
+                    "host wall-clock of result fetch + assembly"),
+            }
+        return self._obs_metrics
+
+    def _obs_dispatch_hist(self):
+        return self._obs_handles()["dispatch"]
+
+    def _obs_drain_hist(self):
+        return self._obs_handles()["drain"]
+
+    def _fold_piece_stats(self, p: np.ndarray, rounds: int = 0,
+                          samples: int = 0) -> None:
+        """Fold one call's per-piece counter matrix into the cumulative
+        engine state (+ registry publication unless REPRO_OBS=off)."""
+        p = np.asarray(p, np.int64)
+        self.piece_stats[:, :4] += p[:, :4]
+        self.piece_stats[:, 4] = np.maximum(self.piece_stats[:, 4], p[:, 4])
+        if not obs.enabled():
+            return
+        h = self._obs_handles()
+        for j, name in enumerate(self.order):
+            children = h["piece"][j]
+            for i, child in enumerate(children):
+                v = int(p[j, i])
+                if v:
+                    child.inc(v)
+            h["hwm"].labels(join=name).set(int(self.piece_stats[j, 4]))
+        if rounds:
+            h["rounds"].inc(int(rounds))
+        if samples:
+            h["samples"].inc(int(samples))
 
     # -- host twin loop (fused_rounds="host") ---------------------------------
     def _sample_host(self, n: int):
@@ -1152,6 +1276,9 @@ class JaxUnionSampler:
         bank, head, count = self._h_bank, self._h_head, self._h_count
         dead, streak = self._h_dead, self._h_streak
         bt = int(sum(self.piece_batches))
+        pbatch = np.asarray(self.piece_batches, np.int64)
+        # numpy twin of the device loop's per-piece telemetry carry
+        pstats = np.zeros((nj, len(PIECE_STAT_FIELDS)), np.int64)
         parts: List[np.ndarray] = []      # (k, A+1) rows + home matrices
         owed = np.zeros(nj, dtype=np.int64)   # per-piece carried shortfall
         total = 0
@@ -1199,6 +1326,13 @@ class JaxUnionSampler:
                 head[j] = (head[j] + dt[j]) % cap
                 count[j] = count[j] - dt[j] + push
             total += int((dt + ft).sum())
+            # identical accumulation rules to the device carry (post-round
+            # bank occupancy for the high-water column)
+            pstats[:, 0] += pbatch
+            pstats[:, 1] += accc
+            pstats[:, 2] += resc
+            pstats[:, 3] += dt
+            pstats[:, 4] = np.maximum(pstats[:, 4], count)
             shortfall = need - dt - ft
             # dead-piece bookkeeping — identical rules to the device loop
             self.stats.dropped_slots += int(shortfall[dead].sum())
@@ -1212,6 +1346,7 @@ class JaxUnionSampler:
             dead |= newly
             owed = shortfall
         self.last_rounds = rounds
+        self._fold_piece_stats(pstats, rounds=rounds, samples=n)
         mat = np.concatenate(parts)[:n].astype(np.int64)
         shuffle = self.host_rng.permutation(n)
         mat = mat[shuffle]

@@ -37,6 +37,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .. import obs
 from .backends import Backend, get_backend
 from .cover import Cover, build_cover
 from .estimators import EstimatorBackend, get_estimator
@@ -70,7 +71,8 @@ class OnlineUnionSampler:
                  warm_rounds: int = 2,
                  backend: str | Backend = "numpy",
                  estimator: Optional[str | EstimatorBackend] = None,
-                 pool_cap: int = 512, mesh=None):
+                 pool_cap: int = 512, mesh=None,
+                 trace_capacity: int = 256):
         self.cat = cat
         self.joins = list(joins)
         self.names = [j.name for j in self.joins]
@@ -126,6 +128,22 @@ class OnlineUnionSampler:
         self.cover: Cover = est.cover
         self.order = list(self.cover.order)
 
+        # φ-trajectory tracer: refinement history used to be dropped on the
+        # floor; the ring keeps the recent trajectory queryable (bounded).
+        self.trace = obs.TraceRing(capacity=trace_capacity)
+        self.refresh_count = 0          # φ-batch refreshes performed so far
+        self.last_refresh_at = -1       # stats.iterations at the last refresh
+        self._hist_sizes = {n: float(self.cover.join_sizes[n])
+                            for n in self.names}
+        self._obs_m = None
+        self.trace.append(
+            "init",
+            union_size=float(self.cover.union_size),
+            piece_sizes={n: float(self.cover.piece_sizes[n])
+                         for n in self.order},
+            join_sizes=dict(self._hist_sizes),
+            order=list(self.order))
+
         for j in self.joins:            # tiny warm start so sizes exist
             for _ in range(warm_rounds):
                 self.estimator.observe([j], rounds=1)
@@ -174,6 +192,7 @@ class OnlineUnionSampler:
 
     def _refresh_parameters(self) -> None:
         """Re-estimate sizes/overlaps from walks; rebuild cover; backtrack."""
+        removed_before = self.stats.backtrack_removed
         old_ratio = {i: self._sel_ratio(i) for i in range(len(self.order))}
         # add fresh walk rounds for every pair (budgeted)
         import itertools
@@ -193,27 +212,78 @@ class OnlineUnionSampler:
         r = {i: (new_ratio[i] / old_ratio[i]) if old_ratio[i] > 0 else 1.0
              for i in range(len(self.order))}
         rmax = max(r.values()) if r else 1.0
-        if rmax <= 0:
-            return
-        kept: List[_Accepted] = []
-        for s in self._accepted:
-            cur = self.cover.piece_sizes[self.order[s.home]] / max(self.cover.union_size, 1e-12)
-            ratio = (cur / s.sel_ratio) if s.sel_ratio > 0 else 1.0
-            q = min(ratio / rmax, 1.0)
-            if self.rng.random() < q:
-                s.sel_ratio = cur
-                kept.append(s)
-            else:
-                self.stats.backtrack_removed += 1
-        self._accepted = kept
-        # confidence check (γ): all pairwise overlap CIs tight enough?
-        hw_ok = True
-        for key, st in self.estimator.overlap_stats.items():
-            if len(key) < 2 or st.count < 8:
-                continue
-            if st.mean > 0 and st.half_width(self.gamma) > self.target_rel_halfwidth * st.mean:
-                hw_ok = False
-        self._confident = hw_ok
+        if rmax > 0:
+            kept: List[_Accepted] = []
+            for s in self._accepted:
+                cur = self.cover.piece_sizes[self.order[s.home]] / max(self.cover.union_size, 1e-12)
+                ratio = (cur / s.sel_ratio) if s.sel_ratio > 0 else 1.0
+                q = min(ratio / rmax, 1.0)
+                if self.rng.random() < q:
+                    s.sel_ratio = cur
+                    kept.append(s)
+                else:
+                    self.stats.backtrack_removed += 1
+            self._accepted = kept
+            # confidence check (γ): all pairwise overlap CIs tight enough?
+            hw_ok = True
+            for key, st in self.estimator.overlap_stats.items():
+                if len(key) < 2 or st.count < 8:
+                    continue
+                if st.mean > 0 and st.half_width(self.gamma) > self.target_rel_halfwidth * st.mean:
+                    hw_ok = False
+            self._confident = hw_ok
+        # ---- trace + metrics (refinement history used to be discarded) ----
+        removed = self.stats.backtrack_removed - removed_before
+        self.refresh_count += 1
+        self.last_refresh_at = self.stats.iterations
+        self.trace.append(
+            "refresh",
+            at_iteration=int(self.stats.iterations),
+            union_size=float(self.cover.union_size),
+            piece_sizes={n: float(self.cover.piece_sizes[n])
+                         for n in self.order},
+            sel_ratio={self.order[i]: float(new_ratio[i])
+                       for i in range(len(self.order))},
+            hist_gap=self.histogram_gaps(),
+            kept=len(self._accepted), removed=int(removed),
+            confident=bool(self._confident))
+        if obs.enabled():
+            m = self._obs_handles()
+            m["refreshes"].inc()
+            if removed:
+                m["backtracked"].inc(removed)
+            m["union"].set(float(self.cover.union_size))
+
+    def histogram_gaps(self) -> Dict[str, float]:
+        """Relative gap between the histogram init bound and the current
+        walk-refined size estimate, per member join: ``(hist - walk)/hist``.
+        Large positive gaps mean the cheap histogram bound overshot."""
+        out = {}
+        for name in self.names:
+            hist = self._hist_sizes.get(name, 0.0)
+            out[name] = (hist - self._join_size_est(name)) / max(hist, 1.0)
+        return out
+
+    @property
+    def backtrack_count(self) -> int:
+        """Total accepted samples removed by backtracking (all refreshes)."""
+        return self.stats.backtrack_removed
+
+    def _obs_handles(self):
+        if self._obs_m is None:
+            reg = obs.get_registry()
+            self._obs_m = {
+                "refreshes": reg.counter(
+                    "repro_online_refreshes_total",
+                    "phi-batch parameter refreshes performed"),
+                "backtracked": reg.counter(
+                    "repro_online_backtrack_removed_total",
+                    "accepted samples removed by backtracking"),
+                "union": reg.gauge(
+                    "repro_online_union_size",
+                    "current union-size estimate after refinement"),
+            }
+        return self._obs_m
 
     # ---------------------------------------------------------------- accept
     def _cover_accept(self, oidx: int, rows: Rows) -> np.ndarray:

@@ -16,10 +16,16 @@ Two modes:
   ``--shards k`` builds a k-device mesh and runs the shard_map'd
   Algorithm-1 rounds of ``repro.core.sharding`` (on CPU set
   ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` first).
+  ``--metrics-port P`` additionally starts a background HTTP thread with
+  ``/metrics`` (Prometheus text: request-latency histogram + p50/p99,
+  queue depth, per-replica engine stats) and ``/healthz`` (``P=0`` binds an
+  ephemeral port, printed at startup); ``--linger S`` keeps the service and
+  endpoint up for S extra seconds after the request loop so external
+  scrapers can collect.
 
       PYTHONPATH=src python -m repro.launch.serve --mode samples \
           --workload UQ1 --requests 16 --samples 4096 --backend jax \
-          --shards 4
+          --shards 4 --metrics-port 9100
 """
 
 from __future__ import annotations
@@ -51,23 +57,44 @@ def serve_samples(args) -> None:
                               backend=args.backend,
                               round_batch=args.round_batch, mesh=mesh)
     sampler.sample(256)                     # warm up / compile
-    with SampleService(sampler, batch=args.round_batch,
-                       prefetch=args.prefetch) as svc:
-        svc.request(args.samples)           # fill the pipeline
-        t0 = time.time()
-        served = 0
-        for rid in range(args.requests):
-            ss = svc.request(args.samples)
-            served += len(ss)
-        dt = time.time() - t0
-        st = svc.stats()
-    shard_note = f", shards={args.shards}" if args.shards else ""
-    print(f"served {args.requests} requests x {args.samples} samples "
-          f"({served} total) in {dt:.2f}s — "
-          f"{served/max(dt, 1e-9):,.0f} samples/s "
-          f"[backend={args.backend}{shard_note}; "
-          f"psi={st.candidate_draws}, rejects={st.cover_rejects}]",
-          flush=True)
+    metrics = None
+    if args.metrics_port is not None:
+        from .. import obs
+        metrics = obs.MetricsServer(port=args.metrics_port).start()
+        print(f"metrics: {metrics.url}/metrics  (health: "
+              f"{metrics.url}/healthz)", flush=True)
+    try:
+        with SampleService(sampler, batch=args.round_batch,
+                           prefetch=args.prefetch) as svc:
+            svc.request(args.samples)       # fill the pipeline
+            t0 = time.time()
+            served = 0
+            for rid in range(args.requests):
+                ss = svc.request(args.samples)
+                served += len(ss)
+            dt = time.time() - t0
+            st = svc.stats()
+            if args.linger > 0:             # let external scrapers collect
+                print(f"lingering {args.linger:.0f}s for scrapes...",
+                      flush=True)
+                time.sleep(args.linger)
+        shard_note = f", shards={args.shards}" if args.shards else ""
+        print(f"served {args.requests} requests x {args.samples} samples "
+              f"({served} total) in {dt:.2f}s — "
+              f"{served/max(dt, 1e-9):,.0f} samples/s "
+              f"[backend={args.backend}{shard_note}; "
+              f"psi={st.candidate_draws}, rejects={st.cover_rejects}]",
+              flush=True)
+        from .. import obs
+        if obs.enabled():
+            reg = obs.get_registry()
+            hist = reg.get("repro_serve_request_seconds")
+            if hist is not None and hist.quantile(0.5) > 0:
+                print(f"request latency: p50={hist.quantile(0.5)*1e3:.2f}ms "
+                      f"p99={hist.quantile(0.99)*1e3:.2f}ms", flush=True)
+    finally:
+        if metrics is not None:
+            metrics.stop()
 
 
 def main(argv: Optional[list] = None) -> None:
@@ -90,6 +117,12 @@ def main(argv: Optional[list] = None) -> None:
                     help="mesh size for the sharded engine (0 = unsharded)")
     ap.add_argument("--prefetch", type=int, default=2,
                     help="prefetched sample batches in the serve queue")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="serve /metrics + /healthz on this port "
+                         "(0 = ephemeral, URL printed at startup)")
+    ap.add_argument("--linger", type=float, default=0.0,
+                    help="keep the service + /metrics up this many seconds "
+                         "after the request loop (for external scrapers)")
     args = ap.parse_args(argv)
 
     if args.mode == "samples":

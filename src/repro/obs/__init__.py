@@ -1,0 +1,35 @@
+"""Engine-wide telemetry (DESIGN.md §10).
+
+Three pieces, importable with zero heavy dependencies (no jax here — the
+engines import *us*):
+
+* :mod:`repro.obs.metrics` — labeled counter/gauge/histogram registry with
+  cheap thread-safe increments, ``snapshot()``, and Prometheus text
+  exposition; global kill switch ``REPRO_OBS=off``.
+* :mod:`repro.obs.tracing` — :class:`TraceRing`, the bounded event log
+  behind the ONLINE-UNION φ-trajectory tracer.
+* :mod:`repro.obs.http` — :class:`MetricsServer`, the background HTTP
+  thread serving ``/metrics`` (Prometheus text) and ``/healthz``.
+
+Instrumented layers: the persistent device loop carries per-piece round
+counters in its jitted carry (``JaxUnionSampler.piece_stats``), the sharded
+loop derives the same counters from its water-filling exchange, ONLINE-UNION
+appends φ-refresh/backtrack events to its trace ring, and the serve tier
+records request-latency histograms, queue depth, and per-replica merged
+``SamplerStats``.  All of it is on by default and disabled end-to-end by
+``REPRO_OBS=off`` (sampling output is bit-identical either way — the
+switch only gates host-side timers and registry publication).
+"""
+
+from .http import MetricsServer, PROMETHEUS_CONTENT_TYPE
+from .metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                      default_latency_buckets, enabled, get_registry,
+                      set_enabled, set_registry, trace_annotations_enabled)
+from .tracing import TraceRing
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "MetricsRegistry", "MetricsServer",
+    "PROMETHEUS_CONTENT_TYPE", "TraceRing", "default_latency_buckets",
+    "enabled", "get_registry", "set_enabled", "set_registry",
+    "trace_annotations_enabled",
+]

@@ -1,0 +1,359 @@
+"""Engine-wide telemetry (DESIGN.md §10): metrics core, tracing, endpoints.
+
+Pinned here:
+
+* metrics core — registry get-or-create, labeled children, thread-safe
+  increments, quantile interpolation, Prometheus text exposition shape,
+  and the ``REPRO_OBS`` kill switch;
+* :class:`TraceRing` bounded wrap with monotone sequence numbers;
+* :class:`MetricsServer` ``/metrics`` + ``/healthz``;
+* ``SamplerStats.merge``/``snapshot`` semantics and the serve queue's
+  merged accounting under concurrent producers;
+* **parity** — the per-piece carry counters ride in the jitted programs
+  unconditionally, so device/host streams stay bitwise identical whether
+  telemetry is on or off, and ``piece_stats`` itself agrees bit for bit;
+* BENCH ``write_json`` appending runs to ``history`` instead of clobbering;
+* ONLINE-UNION exposing its refinement history (``refresh_count``,
+  ``last_refresh_at``, trace events) instead of discarding it.
+"""
+
+import json
+import re
+import threading
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core.backends import get_backend
+from repro.core.backends.jax_backend import JaxUnionSampler
+from repro.core.framework import estimate_union, warmup
+from repro.core.union_sampler import SamplerStats, SetUnionSampler
+from repro.data.workloads import uq1
+from repro.serve.service import SampleService
+
+
+@pytest.fixture
+def registry():
+    """Fresh registry installed as the global one for the test's duration."""
+    reg = obs.MetricsRegistry()
+    prev = obs.set_registry(reg)
+    try:
+        yield reg
+    finally:
+        obs.set_registry(prev)
+
+
+@pytest.fixture
+def obs_on():
+    obs.set_enabled(True)
+    try:
+        yield
+    finally:
+        obs.set_enabled(None)
+
+
+# ---------------------------------------------------------------------------
+# metrics core
+# ---------------------------------------------------------------------------
+
+
+def test_registry_get_or_create_and_kind_conflicts(registry):
+    c1 = registry.counter("t_total", "help one")
+    c2 = registry.counter("t_total")
+    assert c1 is c2
+    with pytest.raises(ValueError):
+        registry.gauge("t_total")           # same name, different kind
+    with pytest.raises(ValueError):
+        registry.counter("bad name!")       # invalid metric name
+
+
+def test_counter_labels_and_negative_rejection(registry):
+    c = registry.counter("req_total", "requests", labelnames=("join",))
+    c.labels("a").inc()
+    c.labels("a").inc(2)
+    c.labels(join="b").inc(5)
+    snap = registry.snapshot()["req_total"]["series"]
+    assert snap[(("join", "a"),)] == 3
+    assert snap[(("join", "b"),)] == 5
+    with pytest.raises(ValueError):
+        c.labels("a").inc(-1)
+
+
+def test_gauge_set_function_pull_time(registry):
+    g = registry.gauge("depth", "queue depth")
+    box = {"v": 7}
+    g.set_function(lambda: box["v"])
+    assert registry.snapshot()["depth"]["series"][()] == 7
+    box["v"] = 3
+    assert registry.snapshot()["depth"]["series"][()] == 3
+
+
+def test_histogram_quantiles_and_exposition(registry):
+    h = registry.histogram("lat_seconds", "latency",
+                           buckets=(0.001, 0.01, 0.1, 1.0))
+    for v in [0.0005] * 50 + [0.05] * 50:
+        h.observe(v)
+    assert h.quantile(0.25) <= 0.001
+    assert 0.01 <= h.quantile(0.99) <= 0.1
+    text = registry.render()
+    # cumulative buckets, +Inf terminal, _sum/_count present
+    buckets = re.findall(r'lat_seconds_bucket{le="([^"]+)"} (\d+)', text)
+    counts = [int(c) for _, c in buckets]
+    assert counts == sorted(counts) and buckets[-1][0] == "+Inf"
+    assert counts[-1] == 100
+    assert re.search(r"^lat_seconds_count 100$", text, re.M)
+    assert "# TYPE lat_seconds histogram" in text
+
+
+def test_thread_safe_increments(registry):
+    c = registry.counter("race_total")
+
+    def work():
+        for _ in range(10_000):
+            c.inc()
+
+    ts = [threading.Thread(target=work) for _ in range(8)]
+    [t.start() for t in ts]
+    [t.join() for t in ts]
+    assert registry.snapshot()["race_total"]["series"][()] == 80_000
+
+
+def test_kill_switch_env_and_override(monkeypatch):
+    monkeypatch.setenv("REPRO_OBS", "off")
+    obs.set_enabled(None)
+    assert not obs.enabled()
+    obs.set_enabled(True)
+    assert obs.enabled()
+    obs.set_enabled(None)
+    monkeypatch.setenv("REPRO_OBS", "on")
+    assert obs.enabled()
+
+
+# ---------------------------------------------------------------------------
+# trace ring
+# ---------------------------------------------------------------------------
+
+
+def test_trace_ring_wrap_and_seq():
+    ring = obs.TraceRing(capacity=4)
+    for i in range(10):
+        ring.append("tick", i=i)
+    assert len(ring) == 4 and ring.total == 10
+    evs = ring.events()
+    assert [e["i"] for e in evs] == [6, 7, 8, 9]
+    assert [e["seq"] for e in evs] == [6, 7, 8, 9]
+    assert ring.last()["i"] == 9
+    assert ring.events("other") == []
+
+
+# ---------------------------------------------------------------------------
+# HTTP endpoints
+# ---------------------------------------------------------------------------
+
+
+def test_metrics_server_endpoints(registry):
+    registry.counter("up_total", "ticks").inc(3)
+    with obs.MetricsServer(registry, port=0) as srv:
+        with urllib.request.urlopen(f"{srv.url}/metrics") as r:
+            body = r.read().decode()
+            assert r.status == 200
+            assert r.headers["Content-Type"] == obs.PROMETHEUS_CONTENT_TYPE
+        assert "up_total 3" in body
+        with urllib.request.urlopen(f"{srv.url}/healthz") as r:
+            assert r.read().decode().strip() == "ok"
+        with pytest.raises(urllib.error.HTTPError):
+            urllib.request.urlopen(f"{srv.url}/nope")
+
+
+# ---------------------------------------------------------------------------
+# SamplerStats merge / snapshot
+# ---------------------------------------------------------------------------
+
+
+def test_sampler_stats_merge_and_snapshot():
+    a = SamplerStats(iterations=3, candidate_draws=10, cover_rejects=1)
+    b = SamplerStats(iterations=2, candidate_draws=5, reuse_accepts=4)
+    snap = a.snapshot()
+    out = a.merge(b)
+    assert out is a                                  # in-place, returns self
+    assert a.iterations == 5 and a.candidate_draws == 15
+    assert a.cover_rejects == 1 and a.reuse_accepts == 4
+    assert snap.iterations == 3                      # snapshot unaffected
+    # associativity on a third operand
+    c = SamplerStats(iterations=1)
+    lhs = SamplerStats().merge(a).merge(c)
+    rhs = SamplerStats().merge(c).merge(a)
+    assert lhs.as_dict() == rhs.as_dict()
+
+
+# ---------------------------------------------------------------------------
+# engine parity with telemetry on / off + piece_stats consistency
+# ---------------------------------------------------------------------------
+
+
+def _cover(wl):
+    return estimate_union(warmup(wl.cat, wl.joins, method="exact").oracle).cover
+
+
+def _engine(wl, cover, mode, seed=7):
+    backend = get_backend("jax", wl.cat, wl.joins, seed=2)
+    return JaxUnionSampler(backend, cover, seed=seed, round_batch=512,
+                           fused_rounds=mode)
+
+
+def _assert_same(a, b):
+    for attr in a.attrs:
+        np.testing.assert_array_equal(a.rows[attr], b.rows[attr])
+    np.testing.assert_array_equal(a.home, b.home)
+    np.testing.assert_array_equal(a.fingerprint, b.fingerprint)
+
+
+def test_parity_unchanged_by_telemetry(registry):
+    """Samples are bitwise identical device vs host, obs on vs off — the
+    per-piece counters are pure extra carry outputs, never inputs."""
+    wl = uq1(scale=0.02, overlap=0.4, seed=0, n_joins=2)
+    cover = _cover(wl)
+    streams = {}
+    for obs_state in (True, False):
+        obs.set_enabled(obs_state)
+        try:
+            dev, host = _engine(wl, cover, "device"), _engine(wl, cover, "host")
+            for n in (700, 333):
+                _assert_same(dev.sample(n), host.sample(n))
+            assert dev.stats.as_dict() == host.stats.as_dict()
+            assert np.array_equal(dev.piece_stats, host.piece_stats)
+            streams[obs_state] = dev.sample(200)
+        finally:
+            obs.set_enabled(None)
+    _assert_same(streams[True], streams[False])
+
+
+def test_piece_stats_consistency(registry, obs_on):
+    """Per-piece draws tie out to the scalar candidate_draws counter, and
+    the registry's per-join series mirror piece_stats."""
+    wl = uq1(scale=0.02, overlap=0.4, seed=0, n_joins=2)
+    s = _engine(wl, _cover(wl), "device")
+    s.sample(800)
+    d = s.piece_stats_dict()
+    assert sum(v["draws"] for v in d.values()) == s.stats.candidate_draws
+    assert all(v["draws"] > 0 for v in d.values())
+    assert all(v["accepts"] <= v["draws"] for v in d.values())
+    series = registry.snapshot()["repro_engine_piece_draws_total"]["series"]
+    for name, v in d.items():
+        assert series[(("join", name),)] == v["draws"]
+
+
+# ---------------------------------------------------------------------------
+# serve: merged accounting under concurrent requesters + request metrics
+# ---------------------------------------------------------------------------
+
+
+def test_serve_concurrent_accounting_and_metrics(registry, obs_on):
+    wl = uq1(scale=0.02, overlap=0.5, seed=1, n_joins=2)
+    cover = _cover(wl)
+    s = SetUnionSampler(wl.cat, wl.joins, cover, seed=13, backend="jax",
+                        round_batch=1024, fused_rounds="device")
+    assert callable(getattr(s, "sample_async", None))
+    got, errs = [], []
+
+    def worker(n):
+        try:
+            got.append(len(svc.request(n)))
+        except Exception as e:          # pragma: no cover - diagnostic
+            errs.append(e)
+
+    with SampleService(s, batch=1024, prefetch=2) as svc:
+        ts = [threading.Thread(target=worker, args=(n,))
+              for n in (300, 700, 450, 1100)]
+        [t.start() for t in ts]
+        [t.join() for t in ts]
+        st = svc.stats()
+        assert not errs and sorted(got) == [300, 450, 700, 1100]
+        assert svc.served == 2550
+        # merged accounting equals the single engine's own counters
+        assert st.as_dict() == s.stats.as_dict()
+    # after stop() the producers are quiesced and the final collector
+    # refresh has run — gauges now agree with the engine's settled counters
+    snap = registry.snapshot()
+    assert snap["repro_serve_requests_total"]["series"][()] == 4
+    assert snap["repro_serve_samples_total"]["series"][()] == 2550
+    lat = snap["repro_serve_request_seconds"]["series"][()]
+    assert lat["count"] == 4 and lat["sum"] > 0
+    assert snap["repro_serve_request_seconds_p50"]["series"][()] > 0
+    # engine stat gauges carry the replica label
+    eng = snap["repro_serve_engine_stat"]["series"]
+    assert eng[(("replica", "0"), ("field", "candidate_draws"))] \
+        == s.stats.candidate_draws
+
+
+def test_serve_respects_kill_switch(registry):
+    obs.set_enabled(False)
+    try:
+        wl = uq1(scale=0.02, overlap=0.5, seed=1, n_joins=2)
+        s = SetUnionSampler(wl.cat, wl.joins, _cover(wl), seed=13,
+                            backend="jax", round_batch=1024,
+                            fused_rounds="device")
+        with SampleService(s, batch=1024, prefetch=1) as svc:
+            assert len(svc.request(500)) == 500
+        assert "repro_serve_requests_total" not in registry.snapshot()
+    finally:
+        obs.set_enabled(None)
+
+
+# ---------------------------------------------------------------------------
+# BENCH history append
+# ---------------------------------------------------------------------------
+
+
+def test_write_json_appends_history(tmp_path):
+    from benchmarks.common import write_json
+    path = str(tmp_path / "BENCH_x.json")
+    write_json(path, records=[{"name": "r1", "samples_per_s": 100.0}])
+    write_json(path, records=[{"name": "r1", "samples_per_s": 120.0}])
+    d = json.loads((tmp_path / "BENCH_x.json").read_text())
+    assert [r["samples_per_s"] for r in d["records"]] == [120.0]
+    assert len(d["history"]) == 2
+    assert [h["records"][0]["samples_per_s"] for h in d["history"]] \
+        == [100.0, 120.0]
+    assert all(h["git_sha"] for h in d["history"])
+    assert d["history"][-1]["ts"]
+
+
+def test_write_json_migrates_legacy_clobber_files(tmp_path):
+    from benchmarks.common import write_json
+    path = tmp_path / "BENCH_legacy.json"
+    path.write_text(json.dumps(
+        {"meta": {"git_sha": "old"},
+         "records": [{"name": "r1", "samples_per_s": 50.0}]}))
+    write_json(str(path), records=[{"name": "r1", "samples_per_s": 70.0}])
+    d = json.loads(path.read_text())
+    assert len(d["history"]) == 2
+    assert d["history"][0]["git_sha"] == "old"
+    assert d["history"][0]["records"][0]["samples_per_s"] == 50.0
+
+
+# ---------------------------------------------------------------------------
+# ONLINE-UNION refinement history
+# ---------------------------------------------------------------------------
+
+
+def test_online_exposes_refinement_history(registry, obs_on):
+    from repro.core.online import OnlineUnionSampler
+    wl = uq1(scale=0.02, overlap=0.5, seed=0, n_joins=2)
+    s = OnlineUnionSampler(wl.cat, wl.joins, seed=3, phi=5)
+    assert s.refresh_count == 0 and s.last_refresh_at == -1
+    assert s.trace.last("init")["union_size"] > 0
+    s.sample(600)
+    assert s.refresh_count >= 1
+    assert 0 < s.last_refresh_at <= s.stats.iterations
+    assert s.backtrack_count == s.stats.backtrack_removed
+    ev = s.trace.last("refresh")
+    assert ev["at_iteration"] == s.last_refresh_at
+    assert set(ev["hist_gap"]) == set(s.names)
+    assert isinstance(ev["confident"], bool) and ev["kept"] >= 0
+    snap = registry.snapshot()
+    assert snap["repro_online_refreshes_total"]["series"][()] \
+        == s.refresh_count
+    assert snap["repro_online_union_size"]["series"][()] > 0
