@@ -9,9 +9,12 @@ syncs) on the UQ1 2-join union, swept over round-batch sizes.  The host loop
 degrades as the round batch shrinks (more rounds → more syncs) while the
 device loop is flat, which is exactly the O(rounds)→O(1) sync story.
 
-Secondary rows cover the numpy reference engine and the other union shapes
-(5-join chain, tree, cyclic).  Structured results land in ``BENCH_union.json``
-via ``--json`` (samples/s, rounds, psi, device count, git sha).
+Secondary rows cover the numpy reference engine, the §8.3 predicate regime
+(``uq2push``/``uq2rej``: UQ2 under pushdown masks vs fused rejection
+predicates, device vs host at the smallest swept round batch), and the other
+union shapes (5-join chain, tree, cyclic).  Structured results land in
+``BENCH_union.json`` via ``--json`` (samples/s, rounds, psi, device count,
+git sha).
 
 Timing protocol: every engine is warmed with a full-size ``sample(n)`` first —
 the device loop compiles one program per output-capacity class, so a small
@@ -30,7 +33,7 @@ import time
 
 from repro.core.framework import estimate_union, warmup
 from repro.core.union_sampler import SetUnionSampler
-from repro.data.workloads import uq1, uq3, uq4
+from repro.data.workloads import uq1, uq2, uq3, uq4
 
 from .common import emit, record, write_json
 
@@ -131,6 +134,29 @@ def run(args) -> int:
            best_host_samples_per_s=best_host)
 
     _bench_numpy("uq1x2", wl2, cover2, min(n, 20_000))
+
+    # §8.3 predicate regime: the same UQ2 base chain under pushdown
+    # (build-time validity masks — the filter is paid once at build, so the
+    # per-draw cost matches an unfiltered join) and rejection (fused
+    # in-round acceptance masks) predicates.  These unions previously
+    # forced the host Algorithm-1 loop; the sweep pins the device win at
+    # the small round batch where per-round sync cost bites hardest.
+    pred_rb = min(args.rb_sweep)
+    pred_sp = {}
+    for ptag, pmode in (("uq2push", "pushdown"), ("uq2rej", "rejection")):
+        wlq = uq2(scale=args.scale, seed=0, pred_mode=pmode)
+        wrq = warmup(wlq.cat, wlq.joins, method="exact")
+        covq = estimate_union(wrq.oracle).cover
+        _, sp = _bench_pair(ptag, wlq, covq, n, pred_rb, args.repeats)
+        pred_sp[ptag] = sp
+        if pmode == "pushdown":
+            _bench_numpy(ptag, wlq, covq, min(n, 20_000))
+    emit("union_engine_uq2pred_summary", 0.0,
+         f"device/host @rb{pred_rb}: pushdown={pred_sp['uq2push']:.2f}x "
+         f"rejection={pred_sp['uq2rej']:.2f}x")
+    record("uq2pred_summary", workload="uq2pred", round_batch=pred_rb,
+           pushdown_speedup=pred_sp["uq2push"],
+           rejection_speedup=pred_sp["uq2rej"])
 
     if not args.smoke:
         # coverage rows: other union shapes, device loop at the default batch

@@ -12,6 +12,10 @@ band (default ±30%):
 * records missing from either side are reported but don't fail (workload
   coverage changes between smoke and full runs).
 
+``--update`` *merges* this run's records into the baseline (overlapping
+records refreshed, records the run didn't cover kept), so smoke and full
+runs can maintain one baseline file between them.
+
 Usage:
     python scripts/perf_gate.py BENCH_union_smoke.json
     python scripts/perf_gate.py BENCH_union_smoke.json --update   # rebaseline
@@ -38,10 +42,22 @@ def latest_rates(bench_path: str) -> dict:
 
 
 def update_baseline(bench_path: str, baseline_path: str) -> int:
+    """Merge this run's rates into the baseline.
+
+    Records the run covers are overwritten; baseline records the run does
+    not cover are kept — so a smoke refresh doesn't wipe full-run rows and
+    a new workload sweep extends the baseline instead of replacing it.
+    """
     rates = latest_rates(bench_path)
     if not rates:
         print(f"perf_gate: no samples_per_s records in {bench_path}")
         return 1
+    try:
+        with open(baseline_path) as f:
+            prev = json.load(f).get("baselines", {})
+    except (FileNotFoundError, json.JSONDecodeError):
+        prev = {}
+    merged = {**prev, **rates}
     with open(bench_path) as f:
         meta = json.load(f).get("meta", {})
     with open(baseline_path, "w") as f:
@@ -49,10 +65,10 @@ def update_baseline(bench_path: str, baseline_path: str) -> int:
                             "git_sha": meta.get("git_sha", "unknown"),
                             "platform": meta.get("platform"),
                             "device_count": meta.get("device_count")},
-                   "baselines": rates}, f, indent=2, sort_keys=True)
+                   "baselines": merged}, f, indent=2, sort_keys=True)
         f.write("\n")
     print(f"perf_gate: wrote baseline {baseline_path} "
-          f"({len(rates)} records)")
+          f"({len(rates)} updated, {len(merged)} total)")
     return 0
 
 

@@ -14,10 +14,17 @@ them.  The union samplers in :mod:`repro.core.union_sampler` and
 :mod:`repro.core.online` are written against these protocols only; selecting
 ``backend="jax"`` swaps the host engine for the device-resident one without
 touching the algorithm layer.  Both engines cover every join shape of the
-paper — chain, acyclic tree, and cyclic (§8.2 skeleton+residual); a device
-join that trips an engine limit (packed edge-key domain beyond int32,
-negative dict values) degrades to a host candidate source per join with a
-warning rather than failing the union.  Backends that can fuse a whole
+paper — chain, acyclic tree, and cyclic (§8.2 skeleton+residual) — and both
+§8.3 predicate modes (pushdown provenance → build-time validity masks;
+rejection predicates → fused in-round acceptance masks) as well as
+``membership="record"`` (device sorted-fingerprint multiset).  A device join
+that trips an engine limit (packed edge-key domain beyond int32, negative
+dict values, predicates outside the int32 comparison set) degrades to a host
+candidate source per join with a warning and a
+``repro_engine_fallback_total`` event rather than failing the union; of the
+union-sampler modes only ``strict_paper_loop`` remains host-only (its
+re-select-on-reject control flow is inherently sequential).  Backends that
+can fuse a whole
 Algorithm-1 round on device additionally expose a ``union_engine`` (see
 :class:`repro.core.backends.jax_backend.JaxUnionSampler`); callers feature-test
 with :func:`Backend.supports_fused_rounds`.  The third execution layer —

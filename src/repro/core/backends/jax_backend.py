@@ -44,9 +44,14 @@ select the device engine without touching the algorithm layer.
 Limits (all checked at build time with clear errors): ``method="ew"``
 weights, non-negative dict-encoded values whose packed edge domains fit in
 int32 (the device substrate is 32-bit; see DESIGN.md).  Chain, acyclic, and
-cyclic (§8.2 skeleton+residual) join shapes all run on device; a union whose
-*individual* joins trip a device limit degrades those joins to host
-candidate draws with a single warning instead of rejecting the whole union.
+cyclic (§8.2 skeleton+residual) join shapes all run on device, as do §8.3
+predicates (pushdown provenance becomes build-time validity masks; rejection
+predicates lower to in-round acceptance masks via
+:func:`repro.core.predicates.compile_preds_jnp`) and ``membership="record"``
+(:class:`JaxRecordUnionSampler`).  A union whose *individual* joins trip a
+device limit degrades those joins to host candidate draws with a single
+warning (and a ``repro_engine_fallback_total`` event) instead of rejecting
+the whole union.
 """
 
 from __future__ import annotations
@@ -188,6 +193,50 @@ def _inverse_cdf_pick(prefix: jnp.ndarray, lo, hi, u):
 # ---------------------------------------------------------------------------
 
 
+def _device_index_cache(cat: Catalog) -> Dict:
+    """Catalog-level cache of device-side sorted indexes and column uploads,
+    keyed by relation identity.  Pushdown flavours of one base join (the UQ2
+    regime: one base chain, several overlapping §8.3 filters) share the base
+    relation's sorted keys, permutation and payload buffers instead of
+    re-sorting and re-uploading per flavour.  Cache entries keep a strong
+    reference to the relation so ``id()`` keys cannot be reused after GC."""
+    cache = cat.__dict__.get("_device_index_cache")
+    if cache is None:
+        cache = cat.__dict__["_device_index_cache"] = {}
+    return cache
+
+
+def _cached_node_index(cache: Dict, rel, edge_attrs: Tuple[str, ...],
+                       radices: Tuple[int, ...], use_pallas: bool):
+    """Sorted composite-key index over ``rel`` (host perm + device arrays),
+    shared across :class:`DeviceTreeJoin` flavours through the catalog cache.
+    The caller has already verified the packed domain fits in int32."""
+    k = ("idx", id(rel), rel.name, edge_attrs, radices, bool(use_pallas))
+    hit = cache.get(k)
+    if hit is None:
+        key = _pack_np([rel.columns[a] for a in edge_attrs], radices)
+        perm = np.argsort(key, kind="stable")
+        prepped = None
+        if use_pallas:
+            from ...kernels.searchsorted import PreparedKeys
+            prepped = PreparedKeys(key[perm])
+        hit = (rel, perm, jnp.asarray(key[perm].astype(np.int32)),
+               jnp.asarray(perm.astype(np.int32)), prepped)
+        cache[k] = hit
+    return hit[1], hit[2], hit[3], hit[4]
+
+
+def _cached_col(cache: Dict, rel, attr: str) -> jnp.ndarray:
+    """Device upload of one relation column, shared across flavours."""
+    k = ("col", id(rel), rel.name, attr)
+    hit = cache.get(k)
+    if hit is None:
+        hit = (rel, jnp.asarray(_as_i32(rel.columns[attr],
+                                        f"{rel.name}.{attr}")))
+        cache[k] = hit
+    return hit[1]
+
+
 @dataclasses.dataclass(frozen=True)
 class _NodeCfg:
     alias: str
@@ -222,15 +271,65 @@ class DeviceTreeJoin:
         self.name = spec.name
         self.spec = spec
         self.attrs = tuple(spec.output_attrs)
+        if spec.pushdown_base is not None and spec.pushed_preds:
+            # §8.3 pushdown provenance: rebuild the filtered join as validity
+            # masks over the shared *base* relations (masked EW prefix sums,
+            # cache-shared sorted indexes).  A base-only device limit (the
+            # unfiltered columns may span a wider packed domain than the
+            # filtered ones) falls back to indexing the filtered relations
+            # directly — same sampling law, no index sharing.
+            try:
+                self._build(cat, spec, spec.pushdown_base, spec.pushed_preds)
+                return
+            except ValueError:
+                pass
+        self._build(cat, spec, None, ())
 
+    def _build(self, cat: Catalog, spec: JoinSpec, base: Optional[JoinSpec],
+               preds: Tuple) -> None:
+        """Build the device state.  ``base is None`` indexes ``spec``'s own
+        relations (the standard build).  Otherwise ``spec`` must be a
+        :func:`repro.core.predicates.pushdown` of ``base``: tree-node indexes
+        are built over the base relations (shared across flavours through the
+        catalog-level device cache) and the filters are baked in as
+        zero-weight rows in the EW prefix sums — masked-out rows are
+        unreachable because their prefix region is flat (``searchsorted``
+        side='right' never lands inside it).  Residual (§8.2) nodes keep
+        per-flavour *filtered* indexes — their match count ``d`` feeds the
+        ``Π d/M`` acceptance, so the index must hold surviving rows only —
+        and the ``uniform`` floor(u·d) shortcut is disabled under a mask for
+        the same reason."""
         js = JoinSampler(cat, spec, method="ew")  # reuse host weight computation
-        widths = _attr_widths(spec)
         self.node_cfgs: List[_NodeCfg] = []
         self.sorted_keys: List[jnp.ndarray] = []
         self.perm: List[jnp.ndarray] = []
         self.wprefix: List[jnp.ndarray] = []
         self.cols: List[Dict[str, jnp.ndarray]] = []
         self._prepped: List[object] = []
+        masked = base is not None
+        if masked:
+            from ..predicates import relation_mask
+            base_rels = {bn.alias: bn.relation for bn in base.nodes}
+            cache = _device_index_cache(cat)
+            widths = _attr_widths(base)
+        else:
+            widths = _attr_widths(spec)
+
+        def _mask_of(alias: str, filtered_nrows: int):
+            rel_b = base_rels.get(alias)
+            if rel_b is None:
+                raise ValueError(
+                    f"jax backend: pushdown base of {spec.name!r} has no "
+                    f"node {alias!r}")
+            m = relation_mask(rel_b, preds)
+            if m is None:
+                m = np.ones(rel_b.nrows, dtype=bool)
+            if int(m.sum()) != filtered_nrows:
+                raise ValueError(
+                    f"jax backend: pushdown provenance of {spec.name!r} is "
+                    f"stale for node {alias!r} (mask keeps {int(m.sum())} "
+                    f"rows, the filtered relation has {filtered_nrows})")
+            return rel_b, m
 
         produced = set(js.root_rel.attrs)
         for n in js.order[1:]:
@@ -248,55 +347,102 @@ class DeviceTreeJoin:
                     "key substrate is int32 (31 usable bits). Re-encode the "
                     "dictionary, use backend='numpy', or see the ROADMAP item "
                     "on int64/two-limb packed keys for the device-side fix")
-            key = _pack_np([rel.columns[a] for a in n.edge_attrs], radices)
-            perm = np.argsort(key, kind="stable")
-            skeys = key[perm].astype(np.int32)
-            uniform = False
-            if n.kind == "residual":
-                # §8.2: residual picks are uniform among matches via
-                # floor(u*d) in _residual_step — no weight prefix needed;
-                # the EW weights cover the skeleton only (host parity)
-                wp = np.zeros(1, dtype=np.float64)
-            else:
-                w = js.node_weights[n.alias]
-                # equal-weight nodes (leaves always; any node whose rows all
-                # continue identically) pick uniformly among the d matches —
-                # same law as the inverse-CDF pick, one searchsorted cheaper
-                uniform = (bool(w.size) and float(w.flat[0]) > 0
+            use_base = masked and n.kind != "residual"
+            if use_base:
+                rel_b, m = _mask_of(n.alias, rel.nrows)
+                perm, skeys_dev, perm_dev, prepped = _cached_node_index(
+                    cache, rel_b, tuple(n.edge_attrs), radices,
+                    self.use_pallas)
+                # scatter the filtered EW weights onto the base rows (the
+                # pushdown filter preserves row order) — masked-out rows get
+                # weight 0 and are never picked by the inverse-CDF step
+                w = np.zeros(rel_b.nrows, dtype=np.float64)
+                w[np.nonzero(m)[0]] = js.node_weights[n.alias]
+                # the uniform floor(u·d) shortcut picks among *index* rows,
+                # so any mask forces the weighted inverse-CDF path
+                uniform = (bool(m.all()) and bool(w.size)
+                           and float(w.flat[0]) > 0
                            and bool(np.all(w == w.flat[0])))
                 if uniform:
                     wp = np.zeros(1, dtype=np.float64)
                 else:
-                    wp = np.zeros(rel.nrows + 1, dtype=np.float64)
+                    wp = np.zeros(rel_b.nrows + 1, dtype=np.float64)
                     np.cumsum(w[perm], out=wp[1:])
-            new_attrs = tuple(a for a in rel.attrs if a not in produced)
-            produced.update(rel.attrs)
+                col_rel = rel_b
+                cols = {a: _cached_col(cache, rel_b, a)
+                        for a in rel_b.attrs if a not in produced}
+            else:
+                key = _pack_np([rel.columns[a] for a in n.edge_attrs],
+                               radices)
+                perm = np.argsort(key, kind="stable")
+                skeys_dev = jnp.asarray(key[perm].astype(np.int32))
+                perm_dev = jnp.asarray(perm.astype(np.int32))
+                prepped = None
+                if self.use_pallas:
+                    from ...kernels.searchsorted import PreparedKeys
+                    prepped = PreparedKeys(key[perm])
+                uniform = False
+                if n.kind == "residual":
+                    # §8.2: residual picks are uniform among matches via
+                    # floor(u*d) in _residual_step — no weight prefix needed;
+                    # the EW weights cover the skeleton only (host parity)
+                    wp = np.zeros(1, dtype=np.float64)
+                else:
+                    w = js.node_weights[n.alias]
+                    # equal-weight nodes (leaves always; any node whose rows
+                    # all continue identically) pick uniformly among the d
+                    # matches — same law as the inverse-CDF pick, one
+                    # searchsorted cheaper
+                    uniform = (bool(w.size) and float(w.flat[0]) > 0
+                               and bool(np.all(w == w.flat[0])))
+                    if uniform:
+                        wp = np.zeros(1, dtype=np.float64)
+                    else:
+                        wp = np.zeros(rel.nrows + 1, dtype=np.float64)
+                        np.cumsum(w[perm], out=wp[1:])
+                col_rel = rel
+                cols = {a: jnp.asarray(_as_i32(c, f"{rel.name}.{a}"))
+                        for a, c in rel.columns.items()
+                        if a not in produced}
+            new_attrs = tuple(a for a in col_rel.attrs if a not in produced)
+            produced.update(col_rel.attrs)
             self.node_cfgs.append(_NodeCfg(
                 n.alias, tuple(n.edge_attrs), radices, new_attrs,
                 kind=n.kind, max_degree=int(js.edges[n.alias].max_degree),
                 uniform=uniform))
-            self.sorted_keys.append(jnp.asarray(skeys))
-            self.perm.append(jnp.asarray(perm.astype(np.int32)))
+            self.sorted_keys.append(skeys_dev)
+            self.perm.append(perm_dev)
             self.wprefix.append(jnp.asarray(wp, jnp.float32))
-            self.cols.append({a: jnp.asarray(_as_i32(c, f"{rel.name}.{a}"))
-                              for a, c in rel.columns.items() if a in new_attrs})
-            if self.use_pallas:
-                from ...kernels.searchsorted import PreparedKeys
-                self._prepped.append(PreparedKeys(key[perm]))
-            else:
-                self._prepped.append(None)
+            self.cols.append(cols)
+            self._prepped.append(prepped)
 
         self.has_residual = any(c.kind == "residual" for c in self.node_cfgs)
-        self.host_root_cols = {a: _as_i32(c, f"root.{a}")
-                               for a, c in js.root_rel.columns.items()}
-        self.root_cols = {a: jnp.asarray(c)
-                          for a, c in self.host_root_cols.items()}
-        # float64 host prefix retained: the sharding layer cuts weight-quantile
-        # root ranges from it (repro.core.sharding.catalog.ShardedTreeJoin)
-        self.host_root_wprefix = np.asarray(js.root_weight_prefix, np.float64)
-        self.root_wprefix = jnp.asarray(js.root_weight_prefix, jnp.float32)
+        if masked:
+            rel_b0, m0 = _mask_of(js.order[0].alias, js.root_rel.nrows)
+            w0 = np.zeros(rel_b0.nrows, dtype=np.float64)
+            w0[np.nonzero(m0)[0]] = np.diff(
+                np.asarray(js.root_weight_prefix, np.float64))
+            self.host_root_cols = {a: _as_i32(c, f"root.{a}")
+                                   for a, c in rel_b0.columns.items()}
+            self.root_cols = {a: _cached_col(cache, rel_b0, a)
+                              for a in rel_b0.columns}
+            wp0 = np.zeros(rel_b0.nrows + 1, dtype=np.float64)
+            np.cumsum(w0, out=wp0[1:])
+            self.host_root_wprefix = wp0
+            self.n_root = rel_b0.nrows
+        else:
+            self.host_root_cols = {a: _as_i32(c, f"root.{a}")
+                                   for a, c in js.root_rel.columns.items()}
+            self.root_cols = {a: jnp.asarray(c)
+                              for a, c in self.host_root_cols.items()}
+            # float64 host prefix retained: the sharding layer cuts
+            # weight-quantile root ranges from it
+            # (repro.core.sharding.catalog.ShardedTreeJoin)
+            self.host_root_wprefix = np.asarray(js.root_weight_prefix,
+                                                np.float64)
+            self.n_root = js.root_rel.nrows
+        self.root_wprefix = jnp.asarray(self.host_root_wprefix, jnp.float32)
         self.total_weight = float(js.root_weight_total)
-        self.n_root = js.root_rel.nrows
         self._empty = js.is_empty()
 
     def is_empty(self) -> bool:
@@ -418,6 +564,16 @@ class DeviceJoinMembership:
 
     def __init__(self, spec: JoinSpec):
         self.join_name = spec.name
+        # §8.3 rejection predicates: membership in the *filtered* join is the
+        # base membership AND the predicate over the tuple's own columns
+        # (predicates constrain output attributes, so no relation filtering
+        # is needed).  Unlowerable predicates raise ValueError here and the
+        # backend degrades probing to the host prober.
+        self._pred_fn = None
+        if spec.reject_preds:
+            from ..predicates import compile_preds_jnp
+            self._pred_fn = compile_preds_jnp(spec.reject_preds,
+                                              spec.output_attrs)
         # (attrs, sorted_fp1, fp2_in_fp1_order, kmax, nrows) per base relation
         self.rels: List[Tuple[Tuple[str, ...], jnp.ndarray, jnp.ndarray,
                               int, int]] = []
@@ -448,7 +604,8 @@ class DeviceJoinMembership:
     def contains(self, rows: Dict[str, jnp.ndarray]) -> jnp.ndarray:
         """Traced probe: rows are device int32 columns of the output schema."""
         b = rows[next(iter(rows))].shape[0]
-        res = jnp.ones((b,), bool)
+        res = (jnp.ones((b,), bool) if self._pred_fn is None
+               else self._pred_fn(rows))
         for attrs, s1, s2, kmax, n in self.rels:
             if n == 0:
                 return jnp.zeros((b,), bool)
@@ -614,6 +771,7 @@ class JaxBackend(Backend):
                  device_batch: int = 4096,
                  use_pallas: Optional[bool] = None):
         if join_method != "ew":
+            obs.record_fallback("join_method", detail=join_method)
             raise ValueError("jax backend: only method='ew' runs on device "
                              "(eo/wj walks stay on the numpy backend)")
         self.cat = cat
@@ -635,6 +793,8 @@ class JaxBackend(Backend):
                                                     use_pallas=use_pallas)
             except ValueError as e:
                 self.degraded[j.name] = str(e)
+                obs.record_fallback("int32_domain", detail=str(e),
+                                    join=j.name)
         if self.degraded:
             import warnings
             warnings.warn(
@@ -679,6 +839,7 @@ class JaxBackend(Backend):
                 warnings.warn(
                     f"jax backend: device membership unavailable ({e}); "
                     "probing through the host oracle", stacklevel=2)
+                obs.record_fallback("host_oracle", detail=str(e))
                 from ..membership import MembershipProber
                 self._oracle = MembershipProber(self.cat, self.joins)
         return self._oracle
@@ -695,7 +856,7 @@ class JaxBackend(Backend):
 # SamplerStats fields the fused engines accumulate as one device vector
 # (fetched once per sample() call in device mode)
 _STAT_FIELDS = ("iterations", "candidate_draws", "cover_rejects",
-                "residual_rejects", "dropped_slots")
+                "residual_rejects", "pred_rejects", "dropped_slots")
 
 # Per-piece round counters carried as one (nj, 5) int32 matrix in the
 # persistent loop (device mode) / accumulated by the numpy twin (host mode)
@@ -913,12 +1074,35 @@ class JaxUnionSampler:
                  dead_rounds: int = 8, max_rounds: int = 4096,
                  surplus_cap: Optional[int] = None, stats=None,
                  fused_rounds: str = "device", balance: str = "cover",
-                 balance_slack: float = 1.5):
+                 balance_slack: float = 1.5, predicate=None):
         self.backend = backend
         self.cover = cover
         self.order = list(cover.order)
         self.trees = [backend.trees[n] for n in self.order]
         self.attrs = tuple(backend.attrs)
+        # §8.3 predicate lowering, two flavours per cover piece (None = none):
+        #  * _pred_fns[j]   — the piece's own acceptance mask: its
+        #    reject_preds AND the union-wide predicate, fused between the
+        #    candidate draw and the earlier-piece probes;
+        #  * _cont_pred_fns[j] — the piece's reject_preds only, ANDed into
+        #    *containment* checks against piece j by engines that probe raw
+        #    relation fingerprints (the sharded exchange; the replicated
+        #    DeviceJoinMembership carries its own equivalent mask).  The
+        #    union-wide predicate is excluded: candidates already passed it,
+        #    so it cannot separate a tuple from an earlier filtered piece.
+        self.predicate = predicate
+        from ..predicates import compile_preds_jnp
+        gp = tuple(predicate.preds) if predicate is not None else ()
+        self._pred_fns = []
+        self._cont_pred_fns = []
+        for name in self.order:
+            spec = backend.trees[name].spec
+            own = tuple(spec.reject_preds) + gp
+            self._pred_fns.append(
+                compile_preds_jnp(own, spec.output_attrs) if own else None)
+            self._cont_pred_fns.append(
+                compile_preds_jnp(spec.reject_preds, spec.output_attrs)
+                if spec.reject_preds else None)
         self.key = jax.random.PRNGKey(seed)
         self.host_rng = np.random.default_rng(seed)
         self.round_batch = int(round_batch)
@@ -982,8 +1166,9 @@ class JaxUnionSampler:
                     carry_need: jnp.ndarray, extra_target: jnp.ndarray):
         """One Algorithm-1 round (traceable; shared by the host-driven
         wrapper and the device loop body).  Returns per join the
-        accepted-compacted candidate columns plus (ok, residual, accepted)
-        counts and the per-piece need = carry + this round's targets."""
+        accepted-compacted candidate columns plus (ok, residual, accepted,
+        predicate-reject) counts and the per-piece need = carry + this
+        round's targets."""
         with jax.named_scope("algo1_fused_round"):
             return self._round_core_impl(key, probs_cum, carry_need,
                                          extra_target)
@@ -1003,12 +1188,20 @@ class JaxUnionSampler:
                  < extra_target).astype(jnp.int32)
         need = carry_need + jnp.zeros((nj,), jnp.int32).at[pick].add(valid)
         # (2)+(3) per join: batched candidate draw (incl. §8.2 residual-edge
-        # verification for cyclic pieces) + earlier-piece rejection
-        cols, okc, resc, accc = [], [], [], []
+        # verification for cyclic pieces) + fused §8.3 predicate acceptance
+        # + earlier-piece rejection
+        cols, okc, resc, accc, predc = [], [], [], [], []
         for j, tree in enumerate(self.trees):
             bj = self.piece_batches[j]
             rows, acc, walk_ok = tree.draw(jks[j], bj)
             resc.append(jnp.sum(walk_ok) - jnp.sum(acc))
+            pf = self._pred_fns[j]
+            if pf is None:
+                predc.append(jnp.int32(0))
+            else:
+                pok = pf(rows)
+                predc.append(jnp.sum(acc & ~pok).astype(jnp.int32))
+                acc = acc & pok
             for q in range(j):             # pieces earlier in cover order
                 acc = acc & ~members[q].contains(rows)
             # (4) compaction: accepted rows to the front in slot order — a
@@ -1025,16 +1218,17 @@ class JaxUnionSampler:
             accc.append(jnp.sum(acc))
         return (cols, jnp.stack(okc).astype(jnp.int32),
                 jnp.stack(resc).astype(jnp.int32),
-                jnp.stack(accc).astype(jnp.int32), need)
+                jnp.stack(accc).astype(jnp.int32),
+                jnp.stack(predc).astype(jnp.int32), need)
 
     def _round_impl(self, probs_base: jnp.ndarray, dead: jnp.ndarray,
                     carry_need: jnp.ndarray, extra_target: jnp.ndarray,
                     key: jax.Array):
         """Host-driven entry point: one jitted round (fused_rounds="host")."""
         probs_cum, bad = _cover_cum(probs_base, dead)
-        cols, okc, resc, accc, need = self._round_core(
+        cols, okc, resc, accc, predc, need = self._round_core(
             key, probs_cum, carry_need, extra_target)
-        return cols, okc, resc, accc, need, bad
+        return cols, okc, resc, accc, predc, need, bad
 
     # -- the persistent device loop -------------------------------------------
     def _init_state(self):
@@ -1076,7 +1270,7 @@ class JaxUnionSampler:
                 key, kround = jax.random.split(state["key"])
                 extra = jnp.clip(n - total - jnp.sum(state["owed"]),
                                  0, self.round_batch)
-                cols, okc, resc, accc, need = self._round_core(
+                cols, okc, resc, accc, predc, need = self._round_core(
                     kround, probs_cum, state["owed"], extra)
                 # bank take (FIFO, capped) → fresh take → carried shortfall
                 dt = jnp.minimum(jnp.minimum(need, state["bank_count"]),
@@ -1101,9 +1295,10 @@ class JaxUnionSampler:
                 shortfall = jnp.where(newly, 0, shortfall)
                 stats2 = stats + jnp.stack(
                     [jnp.int32(bt), jnp.int32(bt),
-                     (jnp.sum(okc) - jnp.sum(resc)
+                     (jnp.sum(okc) - jnp.sum(resc) - jnp.sum(predc)
                       - jnp.sum(accc)).astype(jnp.int32),
                      jnp.sum(resc).astype(jnp.int32),
+                     jnp.sum(predc).astype(jnp.int32),
                      dropped.astype(jnp.int32)])
                 # per-piece telemetry rides the same carry (PIECE_STAT_FIELDS
                 # columns); pure extra outputs — nothing feeds back into the
@@ -1130,7 +1325,8 @@ class JaxUnionSampler:
                         fail | bad, stats2, pstats2)
 
             init = (state, out, jnp.int32(0), jnp.int32(0),
-                    jnp.bool_(False), jnp.zeros(5, jnp.int32),
+                    jnp.bool_(False), jnp.zeros(len(_STAT_FIELDS),
+                                                jnp.int32),
                     jnp.zeros((len(self.order), len(PIECE_STAT_FIELDS)),
                               jnp.int32))
             return jax.lax.while_loop(cond, body, init)
@@ -1289,7 +1485,7 @@ class JaxUnionSampler:
                 raise RuntimeError("JaxUnionSampler: top-up budget exhausted")
             extra = max(0, min(n - total - int(owed.sum()), self.round_batch))
             self.key, sub = jax.random.split(self.key)
-            cols, okc, resc, accc, need, bad = self._round_jit(
+            cols, okc, resc, accc, predc, need, bad = self._round_jit(
                 self._probs_base, jnp.asarray(dead),
                 jnp.asarray(owed.astype(np.int32)), jnp.int32(extra), sub)
             if bool(np.asarray(bad)):
@@ -1297,14 +1493,16 @@ class JaxUnionSampler:
             okc = np.asarray(okc).astype(np.int64)
             resc = np.asarray(resc).astype(np.int64)
             accc = np.asarray(accc).astype(np.int64)
+            predc = np.asarray(predc).astype(np.int64)
             need = np.asarray(need).astype(np.int64)
             self.stats.iterations += bt
             self.stats.candidate_draws += bt
-            # residual (§8.2) and membership rejections are accounted
-            # separately (dead walks are neither)
+            # residual (§8.2), predicate (§8.3) and membership rejections are
+            # accounted separately (dead walks are none of the three)
             self.stats.residual_rejects += int(resc.sum())
+            self.stats.pred_rejects += int(predc.sum())
             self.stats.cover_rejects += int(okc.sum() - resc.sum()
-                                            - accc.sum())
+                                            - predc.sum() - accc.sum())
             dt = np.minimum(np.minimum(need, count), self._drain_w)
             ft = np.minimum(need - dt, accc)
             for j in range(nj):
@@ -1356,3 +1554,353 @@ class JaxUnionSampler:
         from ..relation import fingerprint128
         fp = fingerprint128([rows[a] for a in sorted(self.attrs)])
         return SampleSet(list(self.attrs), rows, home, fp, self.stats)
+
+
+# ---------------------------------------------------------------------------
+# Record-mode membership on device (the lazy orig_join record, Alg 1 l.8-12)
+# ---------------------------------------------------------------------------
+
+
+class JaxRecordUnionSampler(JaxUnionSampler):
+    """Algorithm 1 with ``membership="record"`` and the ``orig_join`` record
+    as a device-resident sorted-fingerprint multiset.
+
+    The record is four aligned device arrays of capacity ``R``: sorted
+    64-bit row fingerprints (two uint32 halves, the same
+    :func:`fp32_np`/:func:`fp32_jnp` arithmetic as
+    :class:`DeviceJoinMembership` — see DESIGN.md for the collision budget;
+    empty slots hold the all-ones sentinel pair and sort last), the tuple's
+    current **home** piece, and the count of output rows currently credited
+    to the entry.  One round is one jitted program (host-driven: the lazy
+    record semantics need the emitted stream back each round, so there is
+    exactly one device sync per round) that processes the cover pieces in
+    ascending order against the live record:
+
+    * draw ``piece_batches[j]`` candidates (tree walk + §8.2 residual + the
+      fused §8.3 predicate mask),
+    * probe the record (``searchsorted`` + a static duplicate window): a
+      candidate is **rejected** when its record home is an earlier piece
+      (Alg 1 line 8), **revises** when its home is a later piece (lines
+      10-12: the old entry's credited rows are debited and its home moves
+      to ``j``), and is accepted otherwise,
+    * take the first ``need_j`` accepted candidates in slot order (the
+      remaining accepts are discarded — a truncation of an i.i.d. stream,
+      so the emitted prefix stays i.i.d. uniform; there is no surplus
+      banking because banked rows could be invalidated by later revisions),
+    * fold the taken rows into the record: revision flags scatter onto hit
+      entries (credit zeroed, home lowered to ``j``), missed fingerprints
+      are deduplicated with run-length credit counts and merged by one
+      sorted concatenation.  Pieces later in the same round see the updated
+      record, so within-round semantics match the sequential host dict
+      exactly (processing pieces in ascending order means within-round hits
+      on entries created earlier in the round are always earlier-piece
+      rejections, never revisions).
+
+    Revision cannot rewrite rows already handed out, so emission is settled
+    at the end: every emitted row is kept iff its emit-time home equals its
+    **final** record home (revised copies are exactly the rows whose home
+    moved after they were emitted), and the per-round valid total — taken
+    rows minus revision-debited credits — tells the driver when ``n`` valid
+    rows exist.  The first ``n`` valid rows in emission order, shuffled,
+    are the sample.
+
+    The engine is host-driven either way, so ``fused_rounds`` only selects
+    where the round program's carry lives (it is donated device state in
+    both modes); the equivalence test replays ``debug_capture=True`` round
+    captures through a sequential host dict instead.  The sharded engine
+    does not support record mode (the multiset is device-global).
+    """
+
+    _KWIN = 8          # static fp1 duplicate window (cf. DeviceJoinMembership)
+    _SENTINEL = 0xFFFFFFFF
+
+    def __init__(self, backend: JaxBackend, cover, seed: int = 0,
+                 round_batch: int = 4096,
+                 dead_rounds: int = 8, max_rounds: int = 4096,
+                 surplus_cap: Optional[int] = None, stats=None,
+                 fused_rounds: str = "device", balance: str = "cover",
+                 balance_slack: float = 1.5, predicate=None,
+                 record_capacity: Optional[int] = None,
+                 debug_capture: bool = False):
+        super().__init__(backend, cover, seed=seed, round_batch=round_batch,
+                         dead_rounds=dead_rounds, max_rounds=max_rounds,
+                         surplus_cap=surplus_cap, stats=stats,
+                         fused_rounds=fused_rounds, balance=balance,
+                         balance_slack=balance_slack, predicate=predicate)
+        self._sorted_attrs = tuple(sorted(self.attrs))
+        self.record_capacity = record_capacity
+        self.debug_capture = bool(debug_capture)
+        self.captured: List[Dict] = []
+        self._rec_state = None
+        self._rec_jit = jax.jit(self._record_round, donate_argnums=(0,))
+
+    def _ensure_device_inputs(self) -> None:
+        """No-op: record mode never probes the replicated membership
+        indexes, so the backend's lazy build must not be triggered."""
+
+    # -- record state ---------------------------------------------------------
+    def _init_record_state(self, n: int):
+        if self.record_capacity is not None:
+            r = int(self.record_capacity)
+        else:
+            r = 1 << max(12, (4 * int(n) - 1).bit_length())
+        self.R = r
+        return {
+            "f1": jnp.full((r,), self._SENTINEL, jnp.uint32),
+            "f2": jnp.full((r,), self._SENTINEL, jnp.uint32),
+            "home": jnp.full((r,), 0x7FFFFFFF, jnp.int32),
+            "emit": jnp.zeros((r,), jnp.int32),
+            "count": jnp.int32(0),
+            "fail": jnp.bool_(False),
+        }
+
+    # -- one round (traced) ---------------------------------------------------
+    def _record_round(self, state, need: jnp.ndarray, key: jax.Array):
+        nj = len(self.trees)
+        R = self.R
+        keys = jax.random.split(key, nj)
+        cols_out, debug = [], []
+        ft_l, okc_l, resc_l, predc_l, rejc_l = [], [], [], [], []
+        accc_l, revc_l, inval_l = [], [], []
+        for j, tree in enumerate(self.trees):
+            bj = self.piece_batches[j]
+            rows, acc, walk_ok = tree.draw(keys[j], bj)
+            okc_l.append(jnp.sum(walk_ok).astype(jnp.int32))
+            resc_l.append((jnp.sum(walk_ok) - jnp.sum(acc))
+                          .astype(jnp.int32))
+            pf = self._pred_fns[j]
+            if pf is None:
+                predc_l.append(jnp.int32(0))
+            else:
+                pok = pf(rows)
+                predc_l.append(jnp.sum(acc & ~pok).astype(jnp.int32))
+                acc = acc & pok
+            if self.debug_capture:
+                debug.append((dict(rows), acc))
+            f1 = fp32_jnp([rows[a] for a in self._sorted_attrs], salt=1)
+            f2 = fp32_jnp([rows[a] for a in self._sorted_attrs], salt=2)
+            # record lookup against the start-of-piece state
+            lo = jnp.searchsorted(state["f1"], f1, side="left")
+            hit = jnp.zeros((bj,), bool)
+            epos = jnp.zeros((bj,), jnp.int32)
+            for k in range(self._KWIN):
+                pos = jnp.minimum(lo + k, R - 1).astype(jnp.int32)
+                m = ((lo + k < R) & (state["f1"][pos] == f1)
+                     & (state["f2"][pos] == f2))
+                epos = jnp.where(m & ~hit, pos, epos)
+                hit = hit | m
+            home = state["home"][epos]
+            rejc_l.append(jnp.sum(acc & hit & (home < j))
+                          .astype(jnp.int32))
+            accepted = acc & (~hit | (home >= j))
+            accc_l.append(jnp.sum(accepted).astype(jnp.int32))
+            rank = jnp.cumsum(accepted) - 1
+            taken = accepted & (rank < need[j])
+            ft_l.append(jnp.minimum(jnp.sum(accepted), need[j])
+                        .astype(jnp.int32))
+            # emit: taken rows compacted to the front (rank scatter)
+            dst = jnp.where(taken, jnp.cumsum(taken) - 1, bj)
+            mat = jnp.stack([rows[a].astype(jnp.int32)
+                             for a in self.attrs], axis=1)
+            cols_out.append(jnp.zeros((bj, mat.shape[1]), jnp.int32)
+                            .at[dst].set(mat, mode="drop"))
+            # revisions: taken hits whose entry currently lives at a LATER
+            # piece — debit the entry's credited rows, move it home to j
+            th = taken & hit
+            rev = th & (home > j)
+            rev_flag = (jnp.zeros((R,), bool)
+                        .at[jnp.where(rev, epos, R)].set(True, mode="drop"))
+            revc_l.append(jnp.sum(rev_flag).astype(jnp.int32))
+            inval_l.append(jnp.sum(jnp.where(rev_flag, state["emit"], 0))
+                           .astype(jnp.int32))
+            emit2 = jnp.where(rev_flag, 0, state["emit"])
+            home2 = jnp.where(rev_flag, jnp.int32(j), state["home"])
+            emit2 = emit2.at[jnp.where(th, epos, R)].add(1, mode="drop")
+            # insert taken misses: lexicographic (f1, f2) sort → dedup →
+            # run-length credit counts → one sorted-concat merge
+            tm = taken & ~hit
+            cf1 = jnp.where(tm, f1, jnp.uint32(self._SENTINEL))
+            cf2 = jnp.where(tm, f2, jnp.uint32(self._SENTINEL))
+            o = jnp.argsort(cf2)
+            o = o[jnp.argsort(cf1[o])]
+            sf1, sf2, stm = cf1[o], cf2[o], tm[o]
+            first = jnp.arange(bj) == 0
+            dup = (~first & (sf1 == jnp.roll(sf1, 1))
+                   & (sf2 == jnp.roll(sf2, 1)))
+            is_new = stm & ~dup
+            g = jnp.cumsum(is_new) - 1
+            counts = (jnp.zeros((bj,), jnp.int32)
+                      .at[jnp.where(stm, g, bj)].add(1, mode="drop"))
+            n_new = jnp.sum(is_new).astype(jnp.int32)
+            new_emit = jnp.where(is_new, counts[jnp.clip(g, 0, bj - 1)], 0)
+            nf1 = jnp.where(is_new, sf1, jnp.uint32(self._SENTINEL))
+            nf2 = jnp.where(is_new, sf2, jnp.uint32(self._SENTINEL))
+            nhome = jnp.where(is_new, jnp.int32(j), jnp.int32(0x7FFFFFFF))
+            mf1 = jnp.concatenate([state["f1"], nf1])
+            morder = jnp.argsort(mf1)[:R]
+            state = {
+                "f1": mf1[morder],
+                "f2": jnp.concatenate([state["f2"], nf2])[morder],
+                "home": jnp.concatenate([home2, nhome])[morder],
+                "emit": jnp.concatenate([emit2, new_emit.astype(jnp.int32)]
+                                        )[morder],
+                "count": state["count"] + n_new,
+                "fail": state["fail"] | (state["count"] + n_new > R),
+            }
+        out = (state, cols_out, jnp.stack(ft_l), jnp.stack(okc_l),
+               jnp.stack(resc_l), jnp.stack(predc_l), jnp.stack(rejc_l),
+               jnp.stack(accc_l), jnp.stack(revc_l), jnp.stack(inval_l))
+        if self.debug_capture:
+            return out + (debug,)
+        return out
+
+    # -- driver ---------------------------------------------------------------
+    def sample_async(self, n: int):
+        from ..union_sampler import empty_sample_set
+        if n <= 0:
+            return _ReadyHandle(empty_sample_set(list(self.attrs),
+                                                 self.stats))
+        return _ReadyHandle(self._sample_record(n))
+
+    def sample(self, n: int):
+        from ..union_sampler import empty_sample_set
+        if n <= 0:
+            return empty_sample_set(list(self.attrs), self.stats)
+        return self._sample_record(n)
+
+    def _host_lookup(self, f1s: np.ndarray, q1: np.ndarray):
+        """Positions of (q1, q2) probes: returns the searchsorted lows (the
+        window scan happens at the call site, numpy-vectorised)."""
+        return np.searchsorted(f1s, q1, side="left")
+
+    def _sample_record(self, n: int):
+        from ..union_sampler import SampleSet
+        nj, bt = len(self.order), int(sum(self.piece_batches))
+        if self._rec_state is None:
+            self._rec_state = self._init_record_state(n)
+        pbatch = np.asarray(self.piece_batches, np.int64)
+        pstats = np.zeros((nj, len(PIECE_STAT_FIELDS)), np.int64)
+        dead, streak = self._h_dead, self._h_streak
+        base = np.asarray(self._probs_base, np.float64)
+        parts: List[Tuple[np.ndarray, int]] = []   # (rows matrix, home) in
+        carry = np.zeros(nj, dtype=np.int64)       # emission order
+        valid = 0
+        rounds = 0
+        while valid < n:
+            rounds += 1
+            if rounds > self.max_rounds:
+                raise RuntimeError(
+                    "JaxRecordUnionSampler: top-up budget exhausted")
+            probs = np.where(dead, 0.0, base)
+            s = probs.sum()
+            if s <= 0:
+                raise RuntimeError("all cover pieces unreachable")
+            extra = max(0, min(n - valid - int(carry.sum()),
+                               self.round_batch))
+            fresh = self.host_rng.multinomial(extra, probs / s)
+            need = carry + fresh
+            self.key, sub = jax.random.split(self.key)
+            res = self._rec_jit(self._rec_state,
+                                jnp.asarray(need.astype(np.int32)), sub)
+            (self._rec_state, cols, ft, okc, resc, predc, rejc, accc,
+             revc, inval) = res[:10]
+            if self.debug_capture:
+                self.captured.append({
+                    "need": need.copy(),
+                    "pieces": [({a: np.asarray(c) for a, c in rows.items()},
+                                np.asarray(acc))
+                               for rows, acc in res[10]],
+                })
+            ft = np.asarray(ft).astype(np.int64)
+            okc = np.asarray(okc).astype(np.int64)
+            resc = np.asarray(resc).astype(np.int64)
+            predc = np.asarray(predc).astype(np.int64)
+            rejc = np.asarray(rejc).astype(np.int64)
+            accc = np.asarray(accc).astype(np.int64)
+            if bool(np.asarray(self._rec_state["fail"])):
+                raise RuntimeError(
+                    f"JaxRecordUnionSampler: record capacity R={self.R} "
+                    "exhausted; pass record_capacity= to size the multiset "
+                    "for the expected distinct-tuple volume")
+            for j in range(nj):
+                if ft[j]:
+                    parts.append((np.asarray(cols[j])[:ft[j]], j))
+            valid += int(ft.sum()) - int(np.asarray(inval).sum())
+            self.stats.iterations += bt
+            self.stats.candidate_draws += bt
+            self.stats.residual_rejects += int(resc.sum())
+            self.stats.pred_rejects += int(predc.sum())
+            self.stats.cover_rejects += int(rejc.sum())
+            self.stats.revisions += int(np.asarray(revc).sum())
+            self.stats.backtrack_removed += int(np.asarray(inval).sum())
+            pstats[:, 0] += pbatch
+            pstats[:, 1] += accc
+            pstats[:, 2] += resc
+            # no surplus banking in record mode: columns 3/4 stay zero
+            shortfall = need - ft
+            self.stats.dropped_slots += int(shortfall[dead].sum())
+            shortfall[dead] = 0
+            trig = (shortfall > 0) & (accc == 0)
+            streak[:] = np.where(dead, streak,
+                                 np.where(trig, streak + 1, 0))
+            newly = ~dead & (streak >= self.dead_rounds)
+            self.stats.dropped_slots += int(shortfall[newly].sum())
+            shortfall[newly] = 0
+            dead |= newly
+            carry = shortfall
+        self.last_rounds = rounds
+        self._fold_piece_stats(pstats, rounds=rounds, samples=n)
+        # settle emission: keep rows whose emit-time home is still the final
+        # record home (revised copies are exactly the ones whose home moved)
+        f1s = np.asarray(self._rec_state["f1"])
+        f2s = np.asarray(self._rec_state["f2"])
+        homes = np.asarray(self._rec_state["home"])
+        kept: List[np.ndarray] = []
+        for mat, j in parts:
+            by_attr = {a: mat[:, i].astype(np.int64)
+                       for i, a in enumerate(self.attrs)}
+            q1 = fp32_np([by_attr[a] for a in self._sorted_attrs], salt=1)
+            q2 = fp32_np([by_attr[a] for a in self._sorted_attrs], salt=2)
+            lo = self._host_lookup(f1s, q1)
+            fh = np.full(q1.shape[0], -1, np.int64)
+            found = np.zeros(q1.shape[0], bool)
+            for k in range(self._KWIN):
+                pos = np.minimum(lo + k, self.R - 1)
+                m = ((lo + k < self.R) & (f1s[pos] == q1)
+                     & (f2s[pos] == q2) & ~found)
+                fh = np.where(m, homes[pos], fh)
+                found |= m
+            keep = found & (fh == j)
+            if keep.any():
+                km = mat[keep].astype(np.int64)
+                kept.append(np.concatenate(
+                    [km, np.full((km.shape[0], 1), j, np.int64)], axis=1))
+        mat = (np.concatenate(kept) if kept
+               else np.zeros((0, len(self.attrs) + 1), np.int64))
+        if mat.shape[0] < n:
+            raise RuntimeError(
+                "JaxRecordUnionSampler: settled emission came up short "
+                f"({mat.shape[0]} < {n}) — record fingerprint collision")
+        mat = mat[:n]
+        shuffle = self.host_rng.permutation(n)
+        mat = mat[shuffle]
+        rows = {a: np.ascontiguousarray(mat[:, i])
+                for i, a in enumerate(self.attrs)}
+        home = np.ascontiguousarray(mat[:, -1])
+        from ..relation import fingerprint128
+        fp = fingerprint128([rows[a] for a in sorted(self.attrs)])
+        return SampleSet(list(self.attrs), rows, home, fp, self.stats)
+
+    def record_dict(self) -> Dict[int, Tuple[int, int]]:
+        """The current record as ``{fp64: (home, credited_rows)}`` (test
+        hook: the debug-capture replay compares its host dict to this)."""
+        if self._rec_state is None:
+            return {}
+        f1 = np.asarray(self._rec_state["f1"]).astype(np.uint64)
+        f2 = np.asarray(self._rec_state["f2"]).astype(np.uint64)
+        home = np.asarray(self._rec_state["home"])
+        emit = np.asarray(self._rec_state["emit"])
+        real = ~((f1 == self._SENTINEL) & (f2 == self._SENTINEL))
+        return {int((f1[i] << np.uint64(32)) | f2[i]):
+                (int(home[i]), int(emit[i]))
+                for i in np.nonzero(real)[0]}

@@ -45,7 +45,9 @@ class WarmupResult:
 
 def _exact_size_fn(cat: Catalog):
     def f(j: JoinSpec) -> float:
-        if j.is_cyclic:
+        if j.is_cyclic or j.reject_preds:
+            # cyclic: residual edges; reject_preds: the filtered join must be
+            # counted — both need the materialised distinct count
             return float(exact_join_size_distinct(cat, j))
         # duplicate-free base relations => join output duplicate-free, so the
         # EW total weight IS the distinct size (cheap, no materialisation).
@@ -86,16 +88,29 @@ def warmup(cat: Catalog, joins: Sequence[JoinSpec], method: str = "exact",
             raise ValueError(
                 f"unknown estimation backend {backend!r} "
                 "(expected 'numpy' or 'jax')")
-        oracle = OverlapOracle(hist.estimate, lambda j: olken_bound(cat, j), joins)
+        est_fn = hist.estimate
+        if any(j.reject_preds for j in joins):
+            # §8.3 rejection predicates: overlaps of filtered joins shrink by
+            # (at least) the most selective member's predicate; olken_bound
+            # scales per-join internally
+            from .predicates import scaled_overlap_estimate
+            est_fn = scaled_overlap_estimate(hist.estimate)
+        oracle = OverlapOracle(est_fn, lambda j: olken_bound(cat, j), joins)
         aux = hist
     elif method == "random_walk":
         est_kwargs = {"mesh": mesh} if mesh is not None else {}
         rw = get_estimator(backend, cat, joins, seed=seed, batch=rw_batch,
                            **est_kwargs)
-        oracle = OverlapOracle(
-            lambda d: rw.estimate(d, rel_halfwidth=rw_rel_halfwidth,
-                                  max_walks=rw_max_walks).value,
-            lambda j: rw.join_size(j), joins)
+        est_fn = (lambda d: rw.estimate(d, rel_halfwidth=rw_rel_halfwidth,
+                                        max_walks=rw_max_walks).value)
+        size_fn = rw.join_size
+        if any(j.reject_preds for j in joins):
+            # walks sample the unfiltered joins; scale both estimates by the
+            # predicate selectivity (membership probes are already pred-aware)
+            from .predicates import scaled_overlap_estimate, scaled_size_fn
+            est_fn = scaled_overlap_estimate(est_fn)
+            size_fn = scaled_size_fn(size_fn)
+        oracle = OverlapOracle(est_fn, size_fn, joins)
         aux = rw
     else:
         raise ValueError(f"unknown warmup method {method!r}")

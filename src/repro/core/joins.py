@@ -44,6 +44,19 @@ class JoinNode:
 class JoinSpec:
     """An ordered join over base relations (chain / acyclic / cyclic)."""
 
+    # §8.3 predicate provenance — set by the repro.core.predicates helpers
+    # (class-level defaults keep hand-built specs clean):
+    #  * pushed_preds / pushdown_base: filters already materialised into the
+    #    nodes by pushdown(), plus the unfiltered spec they came from — the
+    #    device engine rebuilds the filtered join as validity masks over the
+    #    base relations from these.
+    #  * reject_preds: sampler-side per-join rejection predicates — samplers
+    #    reject failing candidates, membership/size estimation apply them, so
+    #    the filtered join is the set-union member everywhere.
+    pushed_preds: Tuple = ()
+    pushdown_base: Optional["JoinSpec"] = None
+    reject_preds: Tuple = ()
+
     def __init__(self, name: str, nodes: Sequence[JoinNode]):
         self.name = name
         self.nodes: List[JoinNode] = list(nodes)
@@ -239,12 +252,22 @@ def _expand(cat: Catalog, inter: Dict[str, np.ndarray], child: Relation,
 
 
 def full_join(cat: Catalog, spec: JoinSpec) -> Dict[str, np.ndarray]:
-    """Materialise the join result (the expensive FULLJOIN baseline)."""
+    """Materialise the join result (the expensive FULLJOIN baseline).
+
+    ``reject_preds`` (if any) are applied to the output — the filtered join
+    is the member of the union, so exact baselines must count it.
+    """
     order = spec.expansion_order()
     root = order[0]
     inter: Dict[str, np.ndarray] = {a: c.copy() for a, c in root.relation.columns.items()}
     for n in order[1:]:
         inter = _expand(cat, inter, n.relation, n.edge_attrs)
+    if spec.reject_preds:
+        n_rows = next(iter(inter.values())).shape[0] if inter else 0
+        keep = np.ones(n_rows, dtype=bool)
+        for p in spec.reject_preds:
+            keep &= p.mask(inter)
+        inter = {a: c[keep] for a, c in inter.items()}
     return inter
 
 
@@ -261,6 +284,10 @@ def full_join_matrix(cat: Catalog, spec: JoinSpec,
 
 def join_size(cat: Catalog, spec: JoinSpec) -> int:
     """|J| without materialising attribute payloads (counts only)."""
+    if spec.reject_preds:
+        # predicate columns must be materialised to count survivors
+        res = full_join(cat, spec)
+        return int(next(iter(res.values())).shape[0]) if res else 0
     order = spec.expansion_order()
     root = order[0]
     inter: Dict[str, np.ndarray] = {a: c for a, c in root.relation.columns.items()}

@@ -49,12 +49,16 @@ class MembershipProber:
         spec = self.joins[join_name]
         n = next(iter(rows.values())).shape[0]
         ok = np.ones(n, dtype=bool)
+        # §8.3 per-join rejection predicates define the filtered join: a tuple
+        # is a member iff the base join contains it AND its own columns pass
+        for p in spec.reject_preds:
+            ok &= p.mask(rows)
         for node in spec.nodes:
+            if not ok.any():
+                break
             attrs = node.relation.attrs
             rs = self.cat.rowset(node.relation, attrs)
             ok &= rs.contains_rows(rows)
-            if not ok.any():
-                break
         return ok
 
     def membership_matrix(self, rows: Dict[str, np.ndarray],

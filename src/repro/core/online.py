@@ -46,6 +46,8 @@ from .index import Catalog
 from .joins import JoinSpec
 from .koverlap import OverlapOracle
 from .membership import rows_subset
+from .predicates import (pred_mask_np, scaled_overlap_estimate,
+                         selectivity_factor)
 from .relation import fingerprint128
 from .size_estimation import olken_bound
 from .union_sampler import SampleSet, SamplerStats, pop_residual_rejects
@@ -72,10 +74,20 @@ class OnlineUnionSampler:
                  backend: str | Backend = "numpy",
                  estimator: Optional[str | EstimatorBackend] = None,
                  pool_cap: int = 512, mesh=None,
-                 trace_capacity: int = 256):
+                 trace_capacity: int = 256, predicate=None):
         self.cat = cat
         self.joins = list(joins)
         self.names = [j.name for j in self.joins]
+        self._by_name = {j.name: j for j in self.joins}
+        # §8.3 predicates: per-join reject_preds AND the union-wide
+        # RejectingPredicate gate fresh draws and reuse-pool candidates
+        # (counted in stats.pred_rejects); the membership prober applies
+        # each piece's own reject_preds internally, so cover acceptance is
+        # already predicate-aware on both backends.
+        self.predicate = predicate
+        gp = tuple(predicate.preds) if predicate is not None else ()
+        self._own_preds = {j.name: tuple(j.reject_preds) + gp
+                           for j in self.joins}
         # get_backend raises on unknown backend strings (no silent fallback)
         self.backend = get_backend(backend, cat, self.joins, join_method=join_method,
                                    seed=seed)
@@ -120,9 +132,16 @@ class OnlineUnionSampler:
                                        seed=seed + 1, batch=rw_batch,
                                        pool_cap=pool_cap, **est_kwargs)
 
-        # (1) cheap init: HISTOGRAM-BASED parameters (device ops under jax)
+        # (1) cheap init: HISTOGRAM-BASED parameters (device ops under jax).
+        # §8.3: under rejection predicates the raw histogram algebra bounds
+        # the *unfiltered* joins — scale overlaps by predicate selectivity so
+        # φ initialisation doesn't overshoot filtered pieces by 1/selectivity
+        # (olken_bound scales per-join internally).
         hist = self.estimator.histogram()
-        oracle = OverlapOracle(hist.estimate,
+        est_fn = hist.estimate
+        if any(j.reject_preds for j in self.joins):
+            est_fn = scaled_overlap_estimate(hist.estimate)
+        oracle = OverlapOracle(est_fn,
                                lambda j: olken_bound(cat, j), self.joins)
         est = estimate_union(oracle, order)
         self.cover: Cover = est.cover
@@ -187,7 +206,10 @@ class OnlineUnionSampler:
     def _join_size_est(self, name: str) -> float:
         st = self.estimator.size_stats.get(name)
         if st is not None and st.count > 0 and st.mean > 0:
-            return st.mean
+            # wander-join walks estimate the unfiltered join; scale by the
+            # §8.3 predicate selectivity so reuse acceptance and the refined
+            # cover see the *filtered* size
+            return st.mean * selectivity_factor(self._by_name[name])
         return max(self.cover.join_sizes[name], 1.0)
 
     def _refresh_parameters(self) -> None:
@@ -202,10 +224,15 @@ class OnlineUnionSampler:
             self.estimator.observe(self.joins, rounds=1)
         self._refresh_pools()
         ostats = self.estimator.overlap_stats
-        oracle = OverlapOracle(
-            lambda d: ostats[frozenset(j.name for j in d)].mean
-            if frozenset(j.name for j in d) in ostats else 0.0,
-            lambda j: self._join_size_est(j.name), self.joins)
+        est_fn = (lambda d: ostats[frozenset(j.name for j in d)].mean
+                  if frozenset(j.name for j in d) in ostats else 0.0)
+        if any(j.reject_preds for j in self.joins):
+            # walks sample the unfiltered joins (membership probes are
+            # already pred-aware) — scale like framework.warmup does
+            est_fn = scaled_overlap_estimate(est_fn)
+        oracle = OverlapOracle(est_fn,
+                               lambda j: self._join_size_est(j.name),
+                               self.joins)
         self.cover = build_cover(oracle, self.order)
         # ---- backtracking ----
         new_ratio = {i: self._sel_ratio(i) for i in range(len(self.order))}
@@ -303,6 +330,14 @@ class OnlineUnionSampler:
         l = len(pool)
         k = int(self.rng.integers(0, l))
         values, p = pool.pop(k)
+        preds = self._own_preds[name]
+        if preds:
+            rows1 = {a: np.asarray([values[a]]) for a in self.attrs}
+            if not bool(pred_mask_np(preds, rows1)[0]):
+                self.stats.pred_rejects += 1
+                return []
+        # |J_j| is predicate-scaled (see _join_size_est), so surviving pool
+        # tuples are emitted uniformly over the *filtered* join
         jsize = self._join_size_est(name)
         # Acceptance R = 1/(p(t)·|J_j|): each pool entry is an independent walk
         # outcome, so P(emit t) = p(t)·R = 1/|J_j|.  (The paper's printed
@@ -351,6 +386,10 @@ class OnlineUnionSampler:
                     self.stats.residual_rejects += pop_residual_rejects(
                         self.sources[name])
                     self._since_refresh += 1
+                    preds = self._own_preds[name]
+                    if preds and not bool(pred_mask_np(preds, rows)[0]):
+                        self.stats.pred_rejects += 1
+                        continue
                     if bool(self._cover_accept(oidx, rows)[0]):
                         accepted = rows
                         break

@@ -65,9 +65,9 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
-from ..backends.jax_backend import (PIECE_STAT_FIELDS, JaxUnionSampler,
-                                    _cover_cum, _emit_and_bank,
-                                    _piece_batches, fp32_jnp)
+from ..backends.jax_backend import (PIECE_STAT_FIELDS, _STAT_FIELDS,
+                                    JaxUnionSampler, _cover_cum,
+                                    _emit_and_bank, _piece_batches, fp32_jnp)
 from .catalog import ShardedCatalog
 
 
@@ -98,7 +98,8 @@ class ShardedUnionSampler(JaxUnionSampler):
                  round_batch: int = 4096, dead_rounds: int = 8,
                  max_rounds: int = 4096, surplus_cap: Optional[int] = None,
                  stats=None, fused_rounds: str = "device",
-                 balance: str = "cover", balance_slack: float = 1.5):
+                 balance: str = "cover", balance_slack: float = 1.5,
+                 predicate=None):
         self.scat = scat
         self.mesh = scat.mesh
         self.saxis = scat.axis
@@ -109,7 +110,7 @@ class ShardedUnionSampler(JaxUnionSampler):
                          dead_rounds=dead_rounds, max_rounds=max_rounds,
                          surplus_cap=surplus_cap, stats=stats,
                          fused_rounds=fused_rounds, balance=balance,
-                         balance_slack=balance_slack)
+                         balance_slack=balance_slack, predicate=predicate)
         # per-shard cover-balanced draw widths; the global schedule (used by
         # the stats accounting) is world× that, and collapses to the
         # unsharded schedule on a 1-device mesh (bitwise-parity pin)
@@ -144,9 +145,10 @@ class ShardedUnionSampler(JaxUnionSampler):
         """One round on one shard: replicated picks, local draws, the
         fingerprint exchange, local acceptance + matrix compaction.
 
-        Returns ``(mats, okc, resc, accc, need)`` where ``mats[j]`` is this
-        shard's accepted-compacted ``(B_j, A+1)`` row matrix and the count
-        vectors are per-shard; ``need`` is the replicated global target.
+        Returns ``(mats, okc, resc, accc, predc, need)`` where ``mats[j]``
+        is this shard's accepted-compacted ``(B_j, A+1)`` row matrix and the
+        count vectors are per-shard; ``need`` is the replicated global
+        target.
         """
         nj = len(self.order)
         world = self.world
@@ -179,18 +181,32 @@ class ShardedUnionSampler(JaxUnionSampler):
         # (3) one fingerprint exchange answers every earlier-piece probe
         found = self._exchange_probes(rows_j, st, sid)
 
-        # (4) local acceptance + rank-scatter compaction (home id rides as
-        # the last matrix column, exactly like the unsharded round)
-        mats, okc, resc, accc = [], [], [], []
+        # (4) local acceptance (fused §8.3 predicate mask first) +
+        # rank-scatter compaction (home id rides as the last matrix column,
+        # exactly like the unsharded round)
+        mats, okc, resc, accc, predc = [], [], [], [], []
         p = 0
         for j in range(nj):
             acc = ok_j[j]
             resc.append(jnp.sum(wok_j[j]) - jnp.sum(acc))
+            pf = self._pred_fns[j]
+            if pf is None:
+                predc.append(jnp.int32(0))
+            else:
+                pok = pf(rows_j[j])
+                predc.append(jnp.sum(acc & ~pok).astype(jnp.int32))
+                acc = acc & pok
             for q in range(j):
                 contained = jnp.ones((bs[j],), bool)
                 for _ in range(len(self.smems[q].rels)):
                     contained = contained & found[p][: bs[j]]
                     p += 1
+                # a rejection-predicate piece q contains the candidate only
+                # if its own reject_preds also hold (the union-wide
+                # predicate is excluded: candidates already passed it)
+                cpf = self._cont_pred_fns[q]
+                if cpf is not None:
+                    contained = contained & cpf(rows_j[j])
                 acc = acc & ~contained
             dst = jnp.where(acc, jnp.cumsum(acc) - 1, bs[j])
             mat = jnp.stack([rows_j[j][a].astype(jnp.int32)
@@ -202,7 +218,8 @@ class ShardedUnionSampler(JaxUnionSampler):
             accc.append(jnp.sum(acc))
         return (mats, jnp.stack(okc).astype(jnp.int32),
                 jnp.stack(resc).astype(jnp.int32),
-                jnp.stack(accc).astype(jnp.int32), need)
+                jnp.stack(accc).astype(jnp.int32),
+                jnp.stack(predc).astype(jnp.int32), need)
 
     def _exchange_probes(self, rows_j, st, sid):
         """All earlier-piece membership probes in one collective exchange.
@@ -273,10 +290,10 @@ class ShardedUnionSampler(JaxUnionSampler):
         def round_fn(probs_base, dead, carry_need, extra_target, key, st):
             sid = jax.lax.axis_index(axis)
             probs_cum, bad = _cover_cum(probs_base, dead)
-            mats, okc, resc, accc, need = self._shard_round_core(
+            mats, okc, resc, accc, predc, need = self._shard_round_core(
                 key, probs_cum, carry_need, extra_target, st, sid)
             return ([m[None] for m in mats], okc[None], resc[None],
-                    accc[None], need[None], bad[None])
+                    accc[None], predc[None], need[None], bad[None])
 
         return jax.jit(shard_map(
             round_fn, mesh=mesh,
@@ -291,11 +308,12 @@ class ShardedUnionSampler(JaxUnionSampler):
         shard-major order — the same consumption order the device loop's
         water-filling allocation uses for fresh rows.
         """
-        mats, okc, resc, accc, need, bad = self._round_prog(
+        mats, okc, resc, accc, predc, need, bad = self._round_prog(
             probs_base, dead, carry_need, extra_target, key, self._state)
         okc = np.asarray(okc)
         resc = np.asarray(resc)
         accc = np.asarray(accc)                     # (world, nj)
+        predc = np.asarray(predc)
         cols: List[np.ndarray] = []
         a1 = len(self.attrs) + 1
         for j in range(len(self.order)):
@@ -311,7 +329,8 @@ class ShardedUnionSampler(JaxUnionSampler):
                 pos += a
             cols.append(g)
         return (cols, okc.sum(axis=0), resc.sum(axis=0), accc.sum(axis=0),
-                np.asarray(need)[0], bool(np.asarray(bad)[0]))
+                predc.sum(axis=0), np.asarray(need)[0],
+                bool(np.asarray(bad)[0]))
 
     # -- the persistent device loop (fused_rounds="device") -------------------
     def _init_state(self):
@@ -362,17 +381,19 @@ class ShardedUnionSampler(JaxUnionSampler):
                 key2, kround = jax.random.split(key)
                 extra = jnp.clip(n - total - jnp.sum(owed),
                                  0, self.round_batch)
-                mats, okc_s, resc_s, accc_s, need = self._shard_round_core(
+                (mats, okc_s, resc_s, accc_s, predc_s,
+                 need) = self._shard_round_core(
                     kround, probs_cum, owed, extra, st, sid)
                 # one tiny exchange: per-shard (bank count, accepted, ok,
-                # residual) matrices — every shard then computes the same
-                # global water-filling allocation AND its own rows' global
-                # output offsets with no further collectives
+                # residual, predicate-reject) matrices — every shard then
+                # computes the same global water-filling allocation AND its
+                # own rows' global output offsets with no further collectives
                 gat = jax.lax.all_gather(
-                    jnp.stack([count, accc_s, okc_s, resc_s]), axis)
+                    jnp.stack([count, accc_s, okc_s, resc_s, predc_s]), axis)
                 counts_w, acc_w = gat[:, 0], gat[:, 1]     # (world, nj)
                 okg = jnp.sum(gat[:, 2])
                 resg = jnp.sum(gat[:, 3])
+                predg = jnp.sum(gat[:, 4])
                 accg_v = jnp.sum(acc_w, axis=0)            # (nj,) global
                 tot_count = jnp.sum(counts_w, axis=0)
                 # bank take (FIFO, capped) → fresh take → carried shortfall
@@ -411,8 +432,10 @@ class ShardedUnionSampler(JaxUnionSampler):
                 shortfall = jnp.where(newly, 0, shortfall)
                 stats2 = stats + jnp.stack(
                     [jnp.int32(bt), jnp.int32(bt),
-                     (okg - resg - jnp.sum(accg_v)).astype(jnp.int32),
+                     (okg - resg - predg - jnp.sum(accg_v))
+                     .astype(jnp.int32),
                      resg.astype(jnp.int32),
+                     predg.astype(jnp.int32),
                      dropped.astype(jnp.int32)])
                 pstats2 = jnp.stack(
                     [pstats[:, 0] + pbatch,
@@ -432,7 +455,7 @@ class ShardedUnionSampler(JaxUnionSampler):
                     shr["bank"][0], shr["bank_head"][0],
                     shr["bank_count"][0], out[0],
                     jnp.int32(0), jnp.int32(0), jnp.bool_(False),
-                    jnp.zeros(5, jnp.int32),
+                    jnp.zeros(len(_STAT_FIELDS), jnp.int32),
                     jnp.zeros((len(self.order), len(PIECE_STAT_FIELDS)),
                               jnp.int32))
             (key, owed, dead, streak, bank, head, count, out2,

@@ -40,12 +40,21 @@ def z_value(confidence: float) -> float:
 
 
 def olken_bound(cat: Catalog, spec: JoinSpec) -> float:
-    """Extended Olken upper bound on |J| (paper §3.2)."""
+    """Extended Olken upper bound on |J| (paper §3.2).
+
+    Joins carrying §8.3 rejection predicates are scaled by the estimated
+    predicate selectivity — the bound must describe the *filtered* join the
+    sampler actually targets, or φ initialisation overestimates selective
+    pieces by 1/selectivity (see predicates.selectivity_factor).
+    """
     order = spec.expansion_order()
     b = float(order[0].relation.nrows)
     for n in order[1:]:
         idx = cat.index(n.relation, list(n.edge_attrs))
         b *= max(idx.max_degree(), 0)
+    if spec.reject_preds:
+        from .predicates import selectivity_factor
+        b *= selectivity_factor(spec)
     return b
 
 

@@ -29,8 +29,15 @@ All samplers draw candidates and probe membership through the backend layer
 (:mod:`repro.core.backends`): ``backend="numpy"`` (default) is the host
 reference engine, behaviour-identical to the pre-backend code;
 ``backend="jax"`` runs whole Algorithm-1 rounds as one jitted device program
-(:class:`repro.core.backends.jax_backend.JaxUnionSampler`; probe membership
-only — record/strict/predicate modes stay on the host engine).  Adding
+(:class:`repro.core.backends.jax_backend.JaxUnionSampler`).  §8.3 predicates
+run inside the fused loop in both modes — ``pushdown()`` provenance becomes
+build-time validity masks, rejection predicates (union-wide ``predicate=`` or
+per-join ``JoinSpec.reject_preds``) lower to in-round acceptance masks — and
+``membership="record"`` keeps the ``orig_join`` record as a device-resident
+sorted-fingerprint multiset (:class:`~repro.core.backends.jax_backend.
+JaxRecordUnionSampler`).  Only ``strict_paper_loop`` remains a host-only
+ablation (it degrades with a ``repro_engine_fallback_total`` event); device-
+unlowerable predicates likewise degrade to the host loop.  Adding
 ``mesh=`` lifts the fused rounds onto a device mesh
 (:class:`repro.core.sharding.ShardedUnionSampler`: per-shard draws from the
 mesh-partitioned catalog, hash-partition membership exchange; a 1-device
@@ -48,7 +55,7 @@ from .backends import Backend, get_backend
 from .cover import Cover
 from .index import Catalog
 from .joins import JoinSpec
-from .membership import rows_concat, rows_subset
+from .membership import rows_concat, rows_length, rows_subset
 from .relation import fingerprint128
 
 Rows = Dict[str, np.ndarray]
@@ -60,6 +67,7 @@ class SamplerStats:
     candidate_draws: int = 0       # ψ of §3.3 (samples obtained from join subroutine)
     cover_rejects: int = 0
     residual_rejects: int = 0      # §8.2 cyclic: walks killed by the Π d/M test
+    pred_rejects: int = 0          # §8.3 rejection-mode predicate failures
     canonical_rejects: int = 0
     revisions: int = 0
     dropped_slots: int = 0
@@ -279,28 +287,67 @@ class SetUnionSampler:
         if mesh is not None and not self.backend.supports_fused_rounds():
             raise ValueError("mesh= requires a fused-round backend; use "
                              "backend='jax'")
-        if self.backend.supports_fused_rounds():
-            if membership != "probe":
-                raise ValueError("membership='record' needs host bookkeeping; "
-                                 "use backend='numpy'")
-            if strict_paper_loop:
+        fused = self.backend.supports_fused_rounds()
+        if fused and strict_paper_loop:
+            # host-only ablation (re-selects a join after every rejection —
+            # inherently sequential); degrade rather than refuse
+            if mesh is not None:
                 raise ValueError("strict_paper_loop is a host-only ablation; "
-                                 "use backend='numpy'")
-            if predicate is not None:
-                raise ValueError("rejection predicates are host objects; use "
-                                 "backend='numpy' (or pushdown() pre-filter)")
+                                 "it cannot run on a mesh")
+            from .. import obs
+            obs.record_fallback("strict_paper_loop",
+                                detail="host-only ablation loop")
+            fused = False
+        if fused and (predicate is not None
+                      or any(j.reject_preds for j in self.joins)):
+            # §8.3 rejection predicates lower to in-round masks when the
+            # comparisons are device-supported; otherwise the whole union
+            # degrades to the host loop (per-join membership must see the
+            # same filtered joins the sampler does)
+            from .predicates import device_lower_reason
+            reason = None
+            for j in self.joins:
+                preds = list(j.reject_preds)
+                if predicate is not None:
+                    preds += list(predicate.preds)
+                reason = device_lower_reason(preds, j.output_attrs)
+                if reason is not None:
+                    break
+            if reason is not None:
+                if mesh is not None:
+                    raise ValueError(
+                        f"predicate not device-lowerable ({reason}); drop "
+                        "mesh= to fall back to the host engine")
+                from .. import obs
+                obs.record_fallback("predicate_unsupported", detail=reason,
+                                    join=j.name)
+                fused = False
+        if fused:
+            if membership == "record" and mesh is not None:
+                raise ValueError(
+                    "membership='record' is not supported on the sharded "
+                    "engine (the record multiset is device-global); drop "
+                    "mesh= or use membership='probe'")
             if mesh is not None:
                 from .sharding import ShardedCatalog, ShardedUnionSampler
                 scat = ShardedCatalog(cat, self.joins, mesh=mesh,
                                       backend=self.backend)
                 self._engine = ShardedUnionSampler(
                     scat, cover, seed=seed, round_batch=round_batch,
-                    stats=self.stats, fused_rounds=fused_rounds)
+                    stats=self.stats, fused_rounds=fused_rounds,
+                    predicate=predicate)
+            elif membership == "record":
+                from .backends.jax_backend import JaxRecordUnionSampler
+                self._engine = JaxRecordUnionSampler(
+                    self.backend, cover, seed=seed, round_batch=round_batch,
+                    stats=self.stats, fused_rounds=fused_rounds,
+                    predicate=predicate)
             else:
                 from .backends.jax_backend import JaxUnionSampler
                 self._engine = JaxUnionSampler(
                     self.backend, cover, seed=seed, round_batch=round_batch,
-                    stats=self.stats, fused_rounds=fused_rounds)
+                    stats=self.stats, fused_rounds=fused_rounds,
+                    predicate=predicate)
 
     # ------------------------------------------------------------------ util
     @property
@@ -337,6 +384,19 @@ class SetUnionSampler:
                 break
             keep &= ~self.prober.contains(self.order[i], rows)
         return keep
+
+    def _pred_ok(self, name: str, rows: Rows) -> Optional[np.ndarray]:
+        """§8.3 own-join predicate mask (per-join ``reject_preds`` AND the
+        union-wide ``predicate=``), or ``None`` when there is none."""
+        from .predicates import pred_mask_np
+        spec = self.by_name[name]
+        mask = None
+        if spec.reject_preds:
+            mask = pred_mask_np(spec.reject_preds, rows)
+        if self.predicate is not None:
+            m = self.predicate.accept(rows)
+            mask = m if mask is None else mask & m
+        return mask
 
     # --------------------------------------------------------------- sampling
     def sample(self, n: int) -> SampleSet:
@@ -394,10 +454,16 @@ class SetUnionSampler:
                         self.stats.dropped_slots += need - got
                         dead_pieces.add(oidx)
                         break
-                    keep = self._cover_accept_probe(oidx, rows)
-                    if self.predicate is not None:
-                        keep &= self.predicate.accept(rows)
-                    self.stats.cover_rejects += int((~keep).sum())
+                    pred_ok = self._pred_ok(name, rows)
+                    if pred_ok is None:
+                        pred_ok = np.ones(rows_length(rows), dtype=bool)
+                    else:
+                        self.stats.pred_rejects += int((~pred_ok).sum())
+                    cover_ok = self._cover_accept_probe(oidx, rows)
+                    # cover_rejects counts candidates that pass the predicate
+                    # but land outside the piece (the device round's split)
+                    self.stats.cover_rejects += int((pred_ok & ~cover_ok).sum())
+                    keep = pred_ok & cover_ok
                     kidx = np.nonzero(keep)[0][: need - got]
                     self.stats.iterations += want
                     if kidx.shape[0]:
@@ -440,9 +506,9 @@ class SetUnionSampler:
                 self.stats.iterations += 1
                 fp2 = fingerprint128([rows[a] for a in sorted(self.attrs)])[0]
                 fpi = _fp_to_int(fp2)
-                if self.predicate is not None and not bool(
-                        self.predicate.accept(rows)[0]):
-                    self.stats.cover_rejects += 1
+                pred_ok = self._pred_ok(name, rows)
+                if pred_ok is not None and not bool(pred_ok[0]):
+                    self.stats.pred_rejects += 1
                     continue
                 if self.membership == "probe":
                     ok = bool(self._cover_accept_probe(oidx, rows)[0])

@@ -24,7 +24,7 @@ import numpy as np
 
 from ..core.index import Catalog
 from ..core.joins import JoinNode, JoinSpec, chain_join
-from ..core.predicates import Pred, pushdown
+from ..core.predicates import Pred, pushdown, rejection
 from ..core.relation import Relation
 from .tpch import TpchLite, generate, horizontal_split, make_variants, vertical_split
 
@@ -66,7 +66,19 @@ def uq1(scale: float = 0.02, overlap: float = 0.2, seed: int = 0,
     return Workload("UQ1", joins, cat, db)
 
 
-def uq2(scale: float = 0.02, seed: int = 0, skew: float = 0.0) -> Workload:
+def uq2(scale: float = 0.02, seed: int = 0, skew: float = 0.0,
+        pred_mode: str = "pushdown") -> Workload:
+    """UQ2 in either §8.3 predicate mode.
+
+    * ``pred_mode="pushdown"`` — base relations filtered at build time; the
+      specs carry pushdown provenance so the device engine rebuilds them as
+      validity masks over the shared base relations.
+    * ``pred_mode="rejection"`` — the three flavours share the *same*
+      unfiltered nodes and differ only in per-join ``reject_preds``;
+      candidates failing them are rejected during sampling.
+    """
+    if pred_mode not in ("pushdown", "rejection"):
+        raise ValueError("pred_mode must be 'pushdown' or 'rejection'")
     db = generate(scale, seed=seed, skew=skew)
     cat = Catalog()
     supplier = db["supplier"].rename({"s_nk": "nk"})
@@ -76,12 +88,10 @@ def uq2(scale: float = 0.02, seed: int = 0, skew: float = 0.0) -> Workload:
         [("rk",), ("nk",), ("sk",), ("pk",)],
     )
     # overlapping selection predicates (the paper's Q2^N / Q2^P / Q2^S flavour)
-    j_n = pushdown(base, [Pred("psize", "<=", 40)], "#N")
-    j_p = pushdown(base, [Pred("psize", ">=", 10)], "#P")
-    j_s = pushdown(base, [Pred("psize", "in", set(range(5, 46)))], "#S")
-    j_n = JoinSpec("UQ2_JN", j_n.nodes)
-    j_p = JoinSpec("UQ2_JP", j_p.nodes)
-    j_s = JoinSpec("UQ2_JS", j_s.nodes)
+    mk = pushdown if pred_mode == "pushdown" else rejection
+    j_n = mk(base, [Pred("psize", "<=", 40)], name="UQ2_JN")
+    j_p = mk(base, [Pred("psize", ">=", 10)], name="UQ2_JP")
+    j_s = mk(base, [Pred("psize", "in", set(range(5, 46)))], name="UQ2_JS")
     return Workload("UQ2", [j_n, j_p, j_s], cat, db)
 
 

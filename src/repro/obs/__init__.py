@@ -30,6 +30,39 @@ from .tracing import TraceRing
 __all__ = [
     "Counter", "Gauge", "Histogram", "MetricsRegistry", "MetricsServer",
     "PROMETHEUS_CONTENT_TYPE", "TraceRing", "default_latency_buckets",
-    "enabled", "get_registry", "set_enabled", "set_registry",
-    "trace_annotations_enabled",
+    "enabled", "fallback_events", "get_registry", "record_fallback",
+    "set_enabled", "set_registry", "trace_annotations_enabled",
 ]
+
+# ---------------------------------------------------------------------------
+# Engine fallback telemetry: every point where a device/fused path degrades
+# to the host engine increments repro_engine_fallback_total{reason=...} and
+# appends a TraceRing event — warnings are once-only and invisible to
+# scrapes; this is the queryable record of "why was this run slow".
+# ---------------------------------------------------------------------------
+
+_fallback_trace = TraceRing(capacity=256)
+
+_FALLBACK_HELP = ("Times a fused/device engine path degraded to the host "
+                  "engine, by reason")
+
+
+def record_fallback(reason: str, detail: str = "", join: str = "") -> None:
+    """Record one engine degrade-to-host event.
+
+    ``reason`` is the stable low-cardinality label (e.g.
+    ``predicate_unsupported``, ``int32_domain``, ``join_method``,
+    ``strict_paper_loop``, ``host_oracle``); ``detail``/``join`` carry the
+    free-form context into the trace ring only.
+    """
+    if not enabled():
+        return
+    get_registry().counter("repro_engine_fallback_total", _FALLBACK_HELP,
+                           ("reason",)).labels(reason=reason).inc()
+    _fallback_trace.append("engine_fallback", reason=reason, detail=detail,
+                           join=join)
+
+
+def fallback_events():
+    """The recent engine-fallback events (newest last)."""
+    return _fallback_trace.events()

@@ -172,9 +172,11 @@ def test_device_membership_fp_duplicate_window():
 @pytest.mark.parametrize("wl_fn,kw", [
     (uq1, dict(scale=0.05, overlap=0.5, seed=1, n_joins=2)),   # chains
     (uq2, dict(scale=0.02, seed=0)),                           # high overlap
+    (uq2, dict(scale=0.02, seed=0, pred_mode="rejection")),    # §8.3 in-round
     (uq3, dict(scale=0.01, overlap=0.3, seed=0)),              # tree join
     (uq4, dict(scale=0.02, seed=0)),                           # cyclic (§8.2)
-], ids=["uq1-chains", "uq2-overlap", "uq3-tree", "uq4-cyclic"])
+], ids=["uq1-chains", "uq2-overlap", "uq2-rejection", "uq3-tree",
+        "uq4-cyclic"])
 def test_set_union_jax_uniform(wl_fn, kw):
     wl = wl_fn(**kw)
     wr = warmup(wl.cat, wl.joins, method="exact")
@@ -207,19 +209,30 @@ def test_set_union_jax_matches_numpy_home_marginal():
 
 
 def test_jax_backend_rejects_unsupported_modes():
+    """Mode gates: predicates and membership="record" now run fused; only
+    strict_paper_loop (and non-lowerable predicates) stay on the host."""
     wl = uq3(scale=0.01, overlap=0.3, seed=0)
     wr = warmup(wl.cat, wl.joins, method="exact")
     est = estimate_union(wr.oracle)
-    with pytest.raises(ValueError, match="record"):
-        SetUnionSampler(wl.cat, wl.joins, est.cover, membership="record",
-                        backend="jax")
-    with pytest.raises(ValueError, match="strict_paper_loop"):
-        SetUnionSampler(wl.cat, wl.joins, est.cover, strict_paper_loop=True,
-                        backend="jax")
+    from repro.core.backends.jax_backend import (JaxRecordUnionSampler,
+                                                 JaxUnionSampler)
     from repro.core.predicates import Pred, RejectingPredicate
-    with pytest.raises(ValueError, match="predicate"):
-        SetUnionSampler(wl.cat, wl.joins, est.cover, backend="jax",
+    s = SetUnionSampler(wl.cat, wl.joins, est.cover, membership="record",
+                        backend="jax")
+    assert isinstance(s._engine, JaxRecordUnionSampler)
+    s = SetUnionSampler(wl.cat, wl.joins, est.cover, backend="jax",
                         predicate=RejectingPredicate([Pred("odate", "<=", 1)]))
+    assert isinstance(s._engine, JaxUnionSampler)
+    # a predicate outside the int32 comparison domain degrades to the host
+    # Algorithm-1 loop (no error) ...
+    s = SetUnionSampler(wl.cat, wl.joins, est.cover, backend="jax",
+                        predicate=RejectingPredicate(
+                            [Pred("odate", "<=", 2 ** 40)]))
+    assert s._engine is None
+    # ... and strict_paper_loop remains the host-only ablation
+    s = SetUnionSampler(wl.cat, wl.joins, est.cover, strict_paper_loop=True,
+                        backend="jax")
+    assert s._engine is None
     with pytest.raises(ValueError, match="ew"):
         JaxBackend(wl.cat, wl.joins, join_method="eo")
 
