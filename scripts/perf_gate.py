@@ -1,16 +1,24 @@
 #!/usr/bin/env python
 """Perf-regression gate over BENCH_union JSON trajectories.
 
-Compares the latest run's ``samples_per_s`` records against the committed
-baseline (``benchmarks/perf_baseline.json``) within a relative tolerance
-band (default ±30%):
+Compares the latest run's records against the committed baseline
+(``benchmarks/perf_baseline.json``) within relative tolerance bands:
 
-* a record **slower** than ``baseline * (1 - tol)`` fails the gate (exit 1);
-* a record **faster** than ``baseline * (1 + tol)`` prints a notice — the
+* ``samples_per_s`` **slower** than ``baseline * (1 - tol)`` fails the gate
+  (exit 1); **faster** than ``baseline * (1 + tol)`` prints a notice — the
   machine got quicker or the engine did; refresh the baseline with
   ``--update`` so the band keeps teeth;
+* ``psi`` (candidate draws per emitted sample — waste) **higher** than
+  ``baseline * (1 + psi_tol)`` also fails: an engine can hold samples/s on a
+  faster machine while silently drawing twice the candidates, and the psi
+  band catches exactly that;
 * records missing from either side are reported but don't fail (workload
   coverage changes between smoke and full runs).
+
+Baseline schema: ``{"baselines": {name: {"samples_per_s": float,
+"psi": float}}}``.  Legacy baselines whose values are bare floats
+(samples_per_s only) still gate on rate and pick up psi bands on the next
+``--update``.
 
 ``--update`` *merges* this run's records into the baseline (overlapping
 records refreshed, records the run didn't cover kept), so smoke and full
@@ -33,12 +41,26 @@ DEFAULT_BASELINE = os.path.join(os.path.dirname(os.path.dirname(
 
 
 def latest_rates(bench_path: str) -> dict:
-    """``{record_name: samples_per_s}`` from a BENCH file's latest run."""
+    """``{record_name: {"samples_per_s": ..., "psi": ...}}`` from a BENCH
+    file's latest run (psi omitted when the record doesn't carry one)."""
     with open(bench_path) as f:
         payload = json.load(f)
-    records = payload.get("records", [])
-    return {r["name"]: float(r["samples_per_s"]) for r in records
-            if "samples_per_s" in r}
+    out = {}
+    for r in payload.get("records", []):
+        if "samples_per_s" not in r:
+            continue
+        entry = {"samples_per_s": float(r["samples_per_s"])}
+        if "psi" in r:
+            entry["psi"] = float(r["psi"])
+        out[r["name"]] = entry
+    return out
+
+
+def _as_entry(value) -> dict:
+    """Normalise a baseline value: legacy bare floats are rate-only."""
+    if isinstance(value, dict):
+        return value
+    return {"samples_per_s": float(value)}
 
 
 def update_baseline(bench_path: str, baseline_path: str) -> int:
@@ -47,6 +69,7 @@ def update_baseline(bench_path: str, baseline_path: str) -> int:
     Records the run covers are overwritten; baseline records the run does
     not cover are kept — so a smoke refresh doesn't wipe full-run rows and
     a new workload sweep extends the baseline instead of replacing it.
+    Legacy bare-float values are upgraded to the dict schema as they merge.
     """
     rates = latest_rates(bench_path)
     if not rates:
@@ -57,7 +80,8 @@ def update_baseline(bench_path: str, baseline_path: str) -> int:
             prev = json.load(f).get("baselines", {})
     except (FileNotFoundError, json.JSONDecodeError):
         prev = {}
-    merged = {**prev, **rates}
+    merged = {name: _as_entry(v) for name, v in prev.items()}
+    merged.update(rates)
     with open(bench_path) as f:
         meta = json.load(f).get("meta", {})
     with open(baseline_path, "w") as f:
@@ -72,11 +96,13 @@ def update_baseline(bench_path: str, baseline_path: str) -> int:
     return 0
 
 
-def gate(bench_path: str, baseline_path: str, tol: float) -> int:
+def gate(bench_path: str, baseline_path: str, tol: float,
+         psi_tol: float) -> int:
     rates = latest_rates(bench_path)
     try:
         with open(baseline_path) as f:
-            base = json.load(f).get("baselines", {})
+            base = {name: _as_entry(v)
+                    for name, v in json.load(f).get("baselines", {}).items()}
     except FileNotFoundError:
         print(f"perf_gate: no baseline at {baseline_path}; "
               "run with --update to create one (gate skipped)")
@@ -89,7 +115,8 @@ def gate(bench_path: str, baseline_path: str, tol: float) -> int:
     failures, notices = [], []
     for name in common:
         got, want = rates[name], base[name]
-        ratio = got / want if want > 0 else float("inf")
+        ratio = (got["samples_per_s"] / want["samples_per_s"]
+                 if want["samples_per_s"] > 0 else float("inf"))
         status = "ok"
         if ratio < 1.0 - tol:
             status = "SLOW"
@@ -97,21 +124,36 @@ def gate(bench_path: str, baseline_path: str, tol: float) -> int:
         elif ratio > 1.0 + tol:
             status = "fast"
             notices.append(name)
-        print(f"  {name}: {got:,.0f}/s vs baseline {want:,.0f}/s "
-              f"({ratio:.2f}x) [{status}]")
+        psi_note = ""
+        if "psi" in got and "psi" in want and want["psi"] > 0:
+            pr = got["psi"] / want["psi"]
+            psi_note = f" psi={got['psi']:.2f} vs {want['psi']:.2f}"
+            if pr > 1.0 + psi_tol:
+                # wasteful regression: more candidate draws per sample even
+                # if wall-clock kept up
+                status = "WASTEFUL" if status == "ok" else status
+                failures.append(f"{name}(psi)")
+            elif pr < 1.0 - psi_tol and status == "ok":
+                notices.append(f"{name}(psi)")
+        print(f"  {name}: {got['samples_per_s']:,.0f}/s vs baseline "
+              f"{want['samples_per_s']:,.0f}/s ({ratio:.2f}x){psi_note} "
+              f"[{status}]")
     for name in sorted(set(rates) - set(base)):
-        print(f"  {name}: {rates[name]:,.0f}/s (no baseline — skipped)")
+        print(f"  {name}: {rates[name]['samples_per_s']:,.0f}/s "
+              "(no baseline — skipped)")
     for name in sorted(set(base) - set(rates)):
         print(f"  {name}: in baseline but not in this run")
     if notices:
         print(f"perf_gate: NOTICE — {len(notices)} record(s) >"
-              f"{tol:.0%} faster than baseline; consider "
+              f"{tol:.0%} better than baseline; consider "
               f"`python scripts/perf_gate.py {bench_path} --update`")
     if failures:
-        print(f"perf_gate: FAIL — {len(failures)} record(s) more than "
-              f"{tol:.0%} slower than baseline: {', '.join(failures)}")
+        print(f"perf_gate: FAIL — {len(failures)} record(s) regressed "
+              f"(rate band ±{tol:.0%}, psi band +{psi_tol:.0%}): "
+              f"{', '.join(failures)}")
         return 1
-    print(f"perf_gate: PASS ({len(common)} records within ±{tol:.0%})")
+    print(f"perf_gate: PASS ({len(common)} records within ±{tol:.0%}, "
+          f"psi within +{psi_tol:.0%})")
     return 0
 
 
@@ -121,13 +163,17 @@ def main(argv=None) -> int:
     ap.add_argument("--baseline", default=DEFAULT_BASELINE)
     ap.add_argument("--tolerance", type=float, default=0.30,
                     help="relative band around the baseline (default 0.30)")
+    ap.add_argument("--psi-tolerance", type=float, default=0.40,
+                    help="allowed relative psi (waste) increase before the "
+                         "gate fails (default 0.40)")
     ap.add_argument("--update", action="store_true",
                     help="rewrite the baseline from this run instead of "
                          "gating")
     args = ap.parse_args(argv)
     if args.update:
         return update_baseline(args.bench, args.baseline)
-    return gate(args.bench, args.baseline, args.tolerance)
+    return gate(args.bench, args.baseline, args.tolerance,
+                args.psi_tolerance)
 
 
 if __name__ == "__main__":

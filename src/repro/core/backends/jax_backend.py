@@ -71,6 +71,7 @@ from ..index import Catalog
 from ..join_sampler import EmptyJoinError, JoinSampler
 from ..joins import JoinSpec
 from ..membership import rows_length
+from .. import planner
 from .base import Backend, Rows
 
 _I32_LIM = 1 << 31
@@ -1013,8 +1014,13 @@ class _PendingSample:
         vec = np.asarray(self._stats_vec)
         for f, v in zip(_STAT_FIELDS, vec):
             setattr(s.stats, f, getattr(s.stats, f) + int(v))
+        ema = None
+        if s.plan == "adaptive" and obs.enabled() and s._dev_state is not None:
+            # snapshot the latest carried EMAs (tiny fetch; result() already
+            # syncs) for the repro_engine_piece_ema gauges
+            ema = np.asarray(s._dev_state["ema"])
         s._fold_piece_stats(np.asarray(self._piece_vec),
-                            rounds=s.last_rounds, samples=self._n)
+                            rounds=s.last_rounds, samples=self._n, ema=ema)
         mat = s._merge_out(self._out)[:self._n].astype(np.int64)[
             self._shuffle]
         rows = {a: np.ascontiguousarray(mat[:, i])
@@ -1074,7 +1080,8 @@ class JaxUnionSampler:
                  dead_rounds: int = 8, max_rounds: int = 4096,
                  surplus_cap: Optional[int] = None, stats=None,
                  fused_rounds: str = "device", balance: str = "cover",
-                 balance_slack: float = 1.5, predicate=None):
+                 balance_slack: float = 1.5, predicate=None,
+                 plan: str = "static"):
         self.backend = backend
         self.cover = cover
         self.order = list(cover.order)
@@ -1131,6 +1138,26 @@ class JaxUnionSampler:
         # stay shallow under cover-balanced batches, so a narrow window
         # drains them just as fast while the wide one mostly moves padding.
         self._drain_w = min(self.round_batch, 256)
+        # adaptive round planner (plan="adaptive"): per-piece acceptance
+        # EMAs carried on device budget the candidate draws each round and
+        # the draw widths shrink to the demand-matched schedule below;
+        # plan="static" traces exactly the pre-planner program and stays
+        # the bitwise parity oracle.
+        if plan not in ("static", "adaptive"):
+            raise ValueError(f"plan must be 'static' or 'adaptive', got "
+                             f"{plan!r}")
+        self.plan = plan
+        if plan == "adaptive":
+            # masked draw slots still cost full compute under XLA's static
+            # shapes, so the planner re-sizes the *widths* themselves:
+            # piece j draws ~ slot * p_j / seeded-acceptance candidates,
+            # where the slot array is expanded to amortize the fixed
+            # per-round dispatch cost (planner.SLOT_EXPANSION)
+            self.piece_batches = planner.alloc_batches(
+                self.piece_batches, base,
+                planner.seed_rates(cover, self._tree_specs())[:, 0],
+                planner.adaptive_slot(self.round_batch))
+        self._setup_planner()
         self.last_rounds = 0
         # per-piece telemetry (PIECE_STAT_FIELDS columns): counters sum
         # across sample() calls, the bank high-water column folds with max.
@@ -1153,6 +1180,30 @@ class JaxUnionSampler:
         self._h_head = np.zeros(nj, dtype=np.int64)
         self._h_count = np.zeros(nj, dtype=np.int64)
 
+    def _tree_specs(self) -> Dict[str, object]:
+        return {n: self.backend.trees[n].spec
+                for n in self.order if n in self.backend.trees}
+
+    def _setup_planner(self) -> None:
+        """Derive planner constants from the (possibly overridden)
+        ``piece_batches``.  Called again by the sharded engine after it
+        rescales the per-piece widths to ``world`` shards."""
+        if self.plan == "adaptive":
+            # expanded selection slots amortize the fixed per-round cost;
+            # the demand-matched widths above size the supply to fill them
+            self._slot_width = planner.adaptive_slot(self.round_batch)
+        else:
+            self._slot_width = self.round_batch
+        self._ema_shifts = planner.ema_shifts(self.piece_batches)
+        self._ema_seed = planner.seed_rates(self.cover, self._tree_specs())
+        self._h_ema = None          # host-twin EMA state (lazy copy of seed)
+        self._pbatch_i32 = np.asarray(self.piece_batches, np.int32)
+        try:
+            self._plan_cache_key = planner.plan_key(
+                self.backend.cat, self.backend.joins, self.cover)
+        except Exception:
+            self._plan_cache_key = None
+
     # -- the fused round program ----------------------------------------------
     def _ensure_device_inputs(self) -> None:
         """Materialise the replicated membership indexes *outside* any trace
@@ -1163,30 +1214,46 @@ class JaxUnionSampler:
         _ = self.backend.members
 
     def _round_core(self, key: jax.Array, probs_cum: jnp.ndarray,
-                    carry_need: jnp.ndarray, extra_target: jnp.ndarray):
+                    carry_need: jnp.ndarray, extra_target: jnp.ndarray,
+                    ema: Optional[jnp.ndarray] = None,
+                    bank_count: Optional[jnp.ndarray] = None):
         """One Algorithm-1 round (traceable; shared by the host-driven
         wrapper and the device loop body).  Returns per join the
         accepted-compacted candidate columns plus (ok, residual, accepted,
         predicate-reject) counts and the per-piece need = carry + this
-        round's targets."""
+        round's targets.  Under ``plan="adaptive"`` the acceptance EMAs and
+        current bank occupancy come in too and the per-piece candidate
+        budget goes out as a seventh element."""
         with jax.named_scope("algo1_fused_round"):
             return self._round_core_impl(key, probs_cum, carry_need,
-                                         extra_target)
+                                         extra_target, ema, bank_count)
 
     def _round_core_impl(self, key: jax.Array, probs_cum: jnp.ndarray,
-                         carry_need: jnp.ndarray, extra_target: jnp.ndarray):
+                         carry_need: jnp.ndarray, extra_target: jnp.ndarray,
+                         ema: Optional[jnp.ndarray] = None,
+                         bank_count: Optional[jnp.ndarray] = None):
         nj = len(self.trees)
+        adaptive = self.plan == "adaptive"
         # resolved at trace time (first round): keeps the lazy backend
         # membership unbuilt for subclasses that override the round program
         members = [self.backend.members[n] for n in self.order]
         kpick, *jks = jax.random.split(key, nj + 1)
         # (1) multinomial cover selection: categorical picks → histogram
-        u = jax.random.uniform(kpick, (self.round_batch,))
+        u = jax.random.uniform(kpick, (self._slot_width,))
         pick = jnp.clip(jnp.searchsorted(probs_cum, u, side="right"
                                          ).astype(jnp.int32), 0, nj - 1)
-        valid = (jnp.arange(self.round_batch)
+        valid = (jnp.arange(self._slot_width)
                  < extra_target).astype(jnp.int32)
         need = carry_need + jnp.zeros((nj,), jnp.int32).at[pick].add(valid)
+        budget = None
+        if adaptive:
+            # integer candidate budget from counts only (owed work minus
+            # usable bank coverage over the accept EMA) — planner.budget_for
+            # is the same fixed-point arithmetic the numpy twin runs, so
+            # host/device budgets are bit-identical from identical carries
+            budget = planner.budget_for(
+                need, bank_count, ema[:, 0],
+                jnp.asarray(self._pbatch_i32), self._drain_w, jnp)
         # (2)+(3) per join: batched candidate draw (incl. §8.2 residual-edge
         # verification for cyclic pieces) + fused §8.3 predicate acceptance
         # + earlier-piece rejection
@@ -1194,6 +1261,13 @@ class JaxUnionSampler:
         for j, tree in enumerate(self.trees):
             bj = self.piece_batches[j]
             rows, acc, walk_ok = tree.draw(jks[j], bj)
+            if budget is not None:
+                # budget mask: the first budget[j] slots of an i.i.d.
+                # candidate stream — a count-derived prefix, so the
+                # surviving candidates stay i.i.d. uniform
+                elig = jnp.arange(bj) < budget[j]
+                acc = acc & elig
+                walk_ok = walk_ok & elig
             resc.append(jnp.sum(walk_ok) - jnp.sum(acc))
             pf = self._pred_fns[j]
             if pf is None:
@@ -1216,25 +1290,30 @@ class JaxUnionSampler:
                         .at[dst].set(mat, mode="drop"))
             okc.append(jnp.sum(walk_ok))
             accc.append(jnp.sum(acc))
-        return (cols, jnp.stack(okc).astype(jnp.int32),
-                jnp.stack(resc).astype(jnp.int32),
-                jnp.stack(accc).astype(jnp.int32),
-                jnp.stack(predc).astype(jnp.int32), need)
+        out = (cols, jnp.stack(okc).astype(jnp.int32),
+               jnp.stack(resc).astype(jnp.int32),
+               jnp.stack(accc).astype(jnp.int32),
+               jnp.stack(predc).astype(jnp.int32), need)
+        if adaptive:
+            out = out + (budget.astype(jnp.int32),)
+        return out
 
     def _round_impl(self, probs_base: jnp.ndarray, dead: jnp.ndarray,
                     carry_need: jnp.ndarray, extra_target: jnp.ndarray,
-                    key: jax.Array):
+                    key: jax.Array, ema: Optional[jnp.ndarray] = None,
+                    bank_count: Optional[jnp.ndarray] = None):
         """Host-driven entry point: one jitted round (fused_rounds="host")."""
         probs_cum, bad = _cover_cum(probs_base, dead)
-        cols, okc, resc, accc, predc, need = self._round_core(
-            key, probs_cum, carry_need, extra_target)
-        return cols, okc, resc, accc, predc, need, bad
+        res = self._round_core(key, probs_cum, carry_need, extra_target,
+                               ema, bank_count)
+        return res + (bad,)
 
     # -- the persistent device loop -------------------------------------------
     def _init_state(self):
-        """Fresh device carry: key + shortfall + ring banks + dead flags."""
+        """Fresh device carry: key + shortfall + ring banks + dead flags
+        (+ the planner's acceptance EMAs under ``plan="adaptive"``)."""
         nj, cap = len(self.order), self.surplus_cap
-        return {
+        st = {
             "key": self.key,
             "owed": jnp.zeros(nj, jnp.int32),
             "dead": jnp.zeros(nj, dtype=bool),
@@ -1243,6 +1322,9 @@ class JaxUnionSampler:
             "bank_head": jnp.zeros(nj, jnp.int32),
             "bank_count": jnp.zeros(nj, jnp.int32),
         }
+        if self.plan == "adaptive":
+            st["ema"] = jnp.asarray(self._ema_seed)
+        return st
 
     def _build_loop(self, C: int):
         """Compile the whole multi-round loop for output capacity ``C``.
@@ -1254,10 +1336,12 @@ class JaxUnionSampler:
         cap = self.surplus_cap
         W = min(self._drain_w, cap)
         bt = int(sum(self.piece_batches))
+        adaptive = self.plan == "adaptive"
         max_rounds = jnp.int32(self.max_rounds)
         dead_rounds = jnp.int32(self.dead_rounds)
 
         pbatch = jnp.asarray(self.piece_batches, jnp.int32)
+        shifts = jnp.asarray(self._ema_shifts)
 
         def loop_fn(state, out, n, probs_base):
             def cond(c):
@@ -1269,9 +1353,16 @@ class JaxUnionSampler:
                 probs_cum, bad = _cover_cum(probs_base, state["dead"])
                 key, kround = jax.random.split(state["key"])
                 extra = jnp.clip(n - total - jnp.sum(state["owed"]),
-                                 0, self.round_batch)
-                cols, okc, resc, accc, predc, need = self._round_core(
-                    kround, probs_cum, state["owed"], extra)
+                                 0, self._slot_width)
+                if adaptive:
+                    cols, okc, resc, accc, predc, need, budget = \
+                        self._round_core(kround, probs_cum, state["owed"],
+                                         extra, state["ema"],
+                                         state["bank_count"])
+                else:
+                    budget = None
+                    cols, okc, resc, accc, predc, need = self._round_core(
+                        kround, probs_cum, state["owed"], extra)
                 # bank take (FIFO, capped) → fresh take → carried shortfall
                 dt = jnp.minimum(jnp.minimum(need, state["bank_count"]),
                                  self._drain_w)
@@ -1293,8 +1384,12 @@ class JaxUnionSampler:
                 newly = ~state["dead"] & (streak >= dead_rounds)
                 dropped = dropped + jnp.sum(jnp.where(newly, shortfall, 0))
                 shortfall = jnp.where(newly, 0, shortfall)
+                # adaptive rounds draw only the budgeted slots; static rounds
+                # spend the full static width every round
+                drawn = (jnp.sum(budget) if adaptive
+                         else jnp.int32(bt))
                 stats2 = stats + jnp.stack(
-                    [jnp.int32(bt), jnp.int32(bt),
+                    [drawn.astype(jnp.int32), drawn.astype(jnp.int32),
                      (jnp.sum(okc) - jnp.sum(resc) - jnp.sum(predc)
                       - jnp.sum(accc)).astype(jnp.int32),
                      jnp.sum(resc).astype(jnp.int32),
@@ -1304,7 +1399,7 @@ class JaxUnionSampler:
                 # columns); pure extra outputs — nothing feeds back into the
                 # sampling arithmetic, so the emitted stream is unchanged
                 pstats2 = jnp.stack(
-                    [pstats[:, 0] + pbatch,
+                    [pstats[:, 0] + (budget if adaptive else pbatch),
                      pstats[:, 1] + accc,
                      pstats[:, 2] + resc,
                      pstats[:, 3] + dt.astype(jnp.int32),
@@ -1317,6 +1412,12 @@ class JaxUnionSampler:
                           "bank": bank2,
                           "bank_head": head2.astype(jnp.int32),
                           "bank_count": count2.astype(jnp.int32)}
+                if adaptive:
+                    # one EMA step from this round's counts (accept /
+                    # walk_ok / residual / pred per budgeted slot)
+                    counts = jnp.stack([accc, okc, resc, predc], axis=1)
+                    state2["ema"] = planner.ema_update(
+                        state["ema"], budget, counts, shifts, jnp)
                 # `bad` (unreachable cover) is terminal: the loop exits on
                 # `fail` and the host raises, discarding the buffers — no
                 # need to gate the state updates (which would force a full
@@ -1382,7 +1483,16 @@ class JaxUnionSampler:
     def sample(self, n: int):
         if self.fused_rounds == "host":
             return self._sample_host(n)
-        return self.sample_async(n).result()
+        t0 = time.perf_counter()
+        ss = self.sample_async(n).result()
+        if self._plan_cache_key is not None and n > 0:
+            # feed the host-side cost model (t_round = c0 + c1*slots); the
+            # fastest warm call per round_batch displaces the compile call
+            planner.PLAN_CACHE.observe(
+                self._plan_cache_key, self.round_batch,
+                int(sum(self.piece_batches)), self.last_rounds,
+                time.perf_counter() - t0, n)
+        return ss
 
     # -- telemetry surfacing (repro.obs) --------------------------------------
     def piece_stats_dict(self) -> Dict[str, Dict[str, int]]:
@@ -1412,6 +1522,14 @@ class JaxUnionSampler:
                 "hwm": reg.gauge("repro_engine_piece_bank_hwm",
                                  "surplus-bank occupancy high-water mark",
                                  ("join",)),
+                "waste": reg.gauge(
+                    "repro_round_waste_ratio",
+                    "1 - accepted/drawn per cover piece (cumulative)",
+                    ("join",)),
+                "ema": reg.gauge(
+                    "repro_engine_piece_ema",
+                    "adaptive-planner acceptance EMA (fraction of budget)",
+                    ("join", "component")),
                 "rounds": reg.counter("repro_engine_rounds_total",
                                       "fused Algorithm-1 rounds run"),
                 "samples": reg.counter("repro_engine_samples_total",
@@ -1432,12 +1550,14 @@ class JaxUnionSampler:
         return self._obs_handles()["drain"]
 
     def _fold_piece_stats(self, p: np.ndarray, rounds: int = 0,
-                          samples: int = 0) -> None:
+                          samples: int = 0,
+                          ema: Optional[np.ndarray] = None) -> None:
         """Fold one call's per-piece counter matrix into the cumulative
         engine state (+ registry publication unless REPRO_OBS=off)."""
         p = np.asarray(p, np.int64)
         self.piece_stats[:, :4] += p[:, :4]
         self.piece_stats[:, 4] = np.maximum(self.piece_stats[:, 4], p[:, 4])
+        self.stats.samples_emitted += int(samples)
         if not obs.enabled():
             return
         h = self._obs_handles()
@@ -1448,6 +1568,14 @@ class JaxUnionSampler:
                 if v:
                     child.inc(v)
             h["hwm"].labels(join=name).set(int(self.piece_stats[j, 4]))
+            draws = int(self.piece_stats[j, 0])
+            if draws:
+                h["waste"].labels(join=name).set(
+                    1.0 - int(self.piece_stats[j, 1]) / draws)
+            if ema is not None:
+                for i, comp in enumerate(planner.EMA_COMPONENTS):
+                    h["ema"].labels(join=name, component=comp).set(
+                        float(ema[j, i]) / planner.EMA_ONE)
         if rounds:
             h["rounds"].inc(int(rounds))
         if samples:
@@ -1472,6 +1600,9 @@ class JaxUnionSampler:
         bank, head, count = self._h_bank, self._h_head, self._h_count
         dead, streak = self._h_dead, self._h_streak
         bt = int(sum(self.piece_batches))
+        adaptive = self.plan == "adaptive"
+        if adaptive and self._h_ema is None:
+            self._h_ema = self._ema_seed.copy()
         pbatch = np.asarray(self.piece_batches, np.int64)
         # numpy twin of the device loop's per-piece telemetry carry
         pstats = np.zeros((nj, len(PIECE_STAT_FIELDS)), np.int64)
@@ -1483,11 +1614,23 @@ class JaxUnionSampler:
             rounds += 1
             if rounds > self.max_rounds:
                 raise RuntimeError("JaxUnionSampler: top-up budget exhausted")
-            extra = max(0, min(n - total - int(owed.sum()), self.round_batch))
+            extra = max(0, min(n - total - int(owed.sum()),
+                               self._slot_width))
             self.key, sub = jax.random.split(self.key)
-            cols, okc, resc, accc, predc, need, bad = self._round_jit(
-                self._probs_base, jnp.asarray(dead),
-                jnp.asarray(owed.astype(np.int32)), jnp.int32(extra), sub)
+            if adaptive:
+                cols, okc, resc, accc, predc, need, budget, bad = \
+                    self._round_jit(
+                        self._probs_base, jnp.asarray(dead),
+                        jnp.asarray(owed.astype(np.int32)),
+                        jnp.int32(extra), sub, jnp.asarray(self._h_ema),
+                        jnp.asarray(count.astype(np.int32)))
+                budget = np.asarray(budget)
+            else:
+                budget = None
+                cols, okc, resc, accc, predc, need, bad = self._round_jit(
+                    self._probs_base, jnp.asarray(dead),
+                    jnp.asarray(owed.astype(np.int32)), jnp.int32(extra),
+                    sub)
             if bool(np.asarray(bad)):
                 raise RuntimeError("all cover pieces unreachable")
             okc = np.asarray(okc).astype(np.int64)
@@ -1495,8 +1638,9 @@ class JaxUnionSampler:
             accc = np.asarray(accc).astype(np.int64)
             predc = np.asarray(predc).astype(np.int64)
             need = np.asarray(need).astype(np.int64)
-            self.stats.iterations += bt
-            self.stats.candidate_draws += bt
+            drawn = bt if budget is None else int(budget.sum())
+            self.stats.iterations += drawn
+            self.stats.candidate_draws += drawn
             # residual (§8.2), predicate (§8.3) and membership rejections are
             # accounted separately (dead walks are none of the three)
             self.stats.residual_rejects += int(resc.sum())
@@ -1526,11 +1670,20 @@ class JaxUnionSampler:
             total += int((dt + ft).sum())
             # identical accumulation rules to the device carry (post-round
             # bank occupancy for the high-water column)
-            pstats[:, 0] += pbatch
+            pstats[:, 0] += pbatch if budget is None else budget.astype(
+                np.int64)
             pstats[:, 1] += accc
             pstats[:, 2] += resc
             pstats[:, 3] += dt
             pstats[:, 4] = np.maximum(pstats[:, 4], count)
+            if adaptive:
+                # numpy EMA step — planner.ema_update with xp=np runs the
+                # same int32 adds/shifts/divides as the device carry
+                counts4 = np.stack([accc, okc, resc, predc],
+                                   axis=1).astype(np.int32)
+                self._h_ema = planner.ema_update(
+                    self._h_ema, budget.astype(np.int32), counts4,
+                    self._ema_shifts, np)
             shortfall = need - dt - ft
             # dead-piece bookkeeping — identical rules to the device loop
             self.stats.dropped_slots += int(shortfall[dead].sum())
@@ -1544,7 +1697,8 @@ class JaxUnionSampler:
             dead |= newly
             owed = shortfall
         self.last_rounds = rounds
-        self._fold_piece_stats(pstats, rounds=rounds, samples=n)
+        self._fold_piece_stats(pstats, rounds=rounds, samples=n,
+                               ema=self._h_ema if adaptive else None)
         mat = np.concatenate(parts)[:n].astype(np.int64)
         shuffle = self.host_rng.permutation(n)
         mat = mat[shuffle]
@@ -1621,7 +1775,13 @@ class JaxRecordUnionSampler(JaxUnionSampler):
                  fused_rounds: str = "device", balance: str = "cover",
                  balance_slack: float = 1.5, predicate=None,
                  record_capacity: Optional[int] = None,
-                 debug_capture: bool = False):
+                 debug_capture: bool = False, plan: str = "static"):
+        # record mode is take-in-slot-order with in-round record revision;
+        # budget masking would interleave with the lazy-record semantics, so
+        # the adaptive planner is not offered here
+        if plan != "static":
+            raise ValueError(
+                "membership='record' supports plan='static' only")
         super().__init__(backend, cover, seed=seed, round_batch=round_batch,
                          dead_rounds=dead_rounds, max_rounds=max_rounds,
                          surplus_cap=surplus_cap, stats=stats,

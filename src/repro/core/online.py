@@ -46,6 +46,7 @@ from .index import Catalog
 from .joins import JoinSpec
 from .koverlap import OverlapOracle
 from .membership import rows_subset
+from .planner import PiecePlanner
 from .predicates import (pred_mask_np, scaled_overlap_estimate,
                          selectivity_factor)
 from .relation import fingerprint128
@@ -74,7 +75,11 @@ class OnlineUnionSampler:
                  backend: str | Backend = "numpy",
                  estimator: Optional[str | EstimatorBackend] = None,
                  pool_cap: int = 512, mesh=None,
-                 trace_capacity: int = 256, predicate=None):
+                 trace_capacity: int = 256, predicate=None,
+                 plan: str = "static"):
+        if plan not in ("static", "adaptive"):
+            raise ValueError(f"plan must be 'static' or 'adaptive', got {plan!r}")
+        self.plan = plan
         self.cat = cat
         self.joins = list(joins)
         self.names = [j.name for j in self.joins]
@@ -146,6 +151,12 @@ class OnlineUnionSampler:
         est = estimate_union(oracle, order)
         self.cover: Cover = est.cover
         self.order = list(self.cover.order)
+        # plan="adaptive": the fresh-draw retry path batches its draws by
+        # the same fixed-point acceptance EMAs the fused engines carry on
+        # device (ceil(1/ema) candidates per retry ~ one accept expected);
+        # φ-refreshes reseed the EMAs from the rebuilt cover.
+        self.planner = (PiecePlanner(self.cover, self._by_name)
+                        if plan == "adaptive" else None)
 
         # φ-trajectory tracer: refinement history used to be dropped on the
         # floor; the ring keeps the recent trajectory queryable (bounded).
@@ -234,6 +245,9 @@ class OnlineUnionSampler:
                                lambda j: self._join_size_est(j.name),
                                self.joins)
         self.cover = build_cover(oracle, self.order)
+        if self.planner is not None:
+            # refined parameters invalidate the learned acceptance rates
+            self.planner.reseed(self.cover, self._by_name)
         # ---- backtracking ----
         new_ratio = {i: self._sel_ratio(i) for i in range(len(self.order))}
         r = {i: (new_ratio[i] / old_ratio[i]) if old_ratio[i] > 0 else 1.0
@@ -357,6 +371,71 @@ class OnlineUnionSampler:
         ratio = self._sel_ratio(oidx)
         return [_Accepted(dict(values), oidx, ratio) for _ in range(copies)]
 
+    # ----------------------------------------------------------- fresh draws
+    def _fresh_static(self, name: str, oidx: int,
+                      retry_rounds: int) -> Optional[Rows]:
+        """Pre-planner fresh-draw loop: one candidate per retry (bit-stable)."""
+        from .join_sampler import EmptyJoinError
+        for _ in range(retry_rounds):
+            try:
+                rows, draws = self.sources[name].draw(self.rng, 1, batch=32)
+            except EmptyJoinError:
+                break
+            self.stats.candidate_draws += draws
+            self.stats.residual_rejects += pop_residual_rejects(
+                self.sources[name])
+            self._since_refresh += 1
+            preds = self._own_preds[name]
+            if preds and not bool(pred_mask_np(preds, rows)[0]):
+                self.stats.pred_rejects += 1
+                continue
+            if bool(self._cover_accept(oidx, rows)[0]):
+                return rows
+            self.stats.cover_rejects += 1
+        return None
+
+    def _fresh_adaptive(self, name: str, oidx: int,
+                        retry_rounds: int) -> Optional[Rows]:
+        """EMA-batched fresh draws: ``suggest_batch`` candidates per retry,
+        first eligible wins; scanned-prefix reject counts feed the planner."""
+        from .join_sampler import EmptyJoinError
+        k = self.planner.suggest_batch(oidx)
+        preds = self._own_preds[name]
+        scanned = accepted_n = pred_total = 0
+        out: Optional[Rows] = None
+        for _ in range(retry_rounds):
+            try:
+                rows, draws = self.sources[name].draw(self.rng, k, batch=32)
+            except EmptyJoinError:
+                break
+            self.stats.candidate_draws += draws
+            self.stats.residual_rejects += pop_residual_rejects(
+                self.sources[name])
+            self._since_refresh += 1
+            nb = next(iter(rows.values())).shape[0]
+            pm = (pred_mask_np(preds, rows) if preds
+                  else np.ones(nb, dtype=bool))
+            cm = self._cover_accept(oidx, rows)
+            elig = np.nonzero(pm & cm)[0]
+            stop = int(elig[0]) + 1 if elig.size else nb
+            # candidates past the first eligible one are never examined —
+            # dropping them whole keeps the emitted tuple a plain uniform
+            # draw conditioned on eligibility
+            pred_r = int((~pm[:stop]).sum())
+            self.stats.pred_rejects += pred_r
+            self.stats.cover_rejects += int((pm[:stop] & ~cm[:stop]).sum())
+            scanned += stop
+            pred_total += pred_r
+            if elig.size:
+                i = int(elig[0])
+                out = {a: rows[a][i:i + 1] for a in self.attrs}
+                accepted_n = 1
+                break
+        if scanned > 0:
+            self.planner.observe(oidx, scanned, accepted_n,
+                                 pred_rejects=pred_total)
+        return out
+
     # ---------------------------------------------------------------- sample
     def sample(self, n: int, retry_rounds: int = 64) -> SampleSet:
         guard = 0
@@ -373,27 +452,15 @@ class OnlineUnionSampler:
                 self._accepted.extend(got)
                 self._since_refresh += 1
             else:
-                # fresh uniform sampling with retry-within-join
-                accepted = None
-                from .join_sampler import EmptyJoinError
-                for _ in range(retry_rounds):
-                    try:
-                        rows, draws = self.sources[name].draw(
-                            self.rng, 1, batch=32)
-                    except EmptyJoinError:
-                        break
-                    self.stats.candidate_draws += draws
-                    self.stats.residual_rejects += pop_residual_rejects(
-                        self.sources[name])
-                    self._since_refresh += 1
-                    preds = self._own_preds[name]
-                    if preds and not bool(pred_mask_np(preds, rows)[0]):
-                        self.stats.pred_rejects += 1
-                        continue
-                    if bool(self._cover_accept(oidx, rows)[0]):
-                        accepted = rows
-                        break
-                    self.stats.cover_rejects += 1
+                # fresh uniform sampling with retry-within-join; under
+                # plan="adaptive" each retry draws an EMA-sized batch and
+                # accepts the first eligible candidate (the batch is i.i.d.
+                # and eligibility is per-candidate, so the first eligible is
+                # the same uniform draw the one-at-a-time loop makes)
+                if self.planner is not None:
+                    accepted = self._fresh_adaptive(name, oidx, retry_rounds)
+                else:
+                    accepted = self._fresh_static(name, oidx, retry_rounds)
                 if accepted is not None:
                     self._accepted.append(_Accepted(
                         {a: int(accepted[a][0]) for a in self.attrs},
@@ -405,6 +472,7 @@ class OnlineUnionSampler:
                 self._since_refresh = 0
                 self._refresh_parameters()
         acc = self._accepted[:n]
+        self.stats.samples_emitted += n
         rows = {a: np.asarray([s.values[a] for s in acc], dtype=np.int64)
                 for a in self.attrs}
         home = np.asarray([s.home for s in acc], dtype=np.int64)

@@ -68,6 +68,7 @@ from jax.sharding import PartitionSpec as P
 from ..backends.jax_backend import (PIECE_STAT_FIELDS, _STAT_FIELDS,
                                     JaxUnionSampler, _cover_cum,
                                     _emit_and_bank, _piece_batches, fp32_jnp)
+from .. import planner
 from .catalog import ShardedCatalog
 
 
@@ -99,7 +100,7 @@ class ShardedUnionSampler(JaxUnionSampler):
                  max_rounds: int = 4096, surplus_cap: Optional[int] = None,
                  stats=None, fused_rounds: str = "device",
                  balance: str = "cover", balance_slack: float = 1.5,
-                 predicate=None):
+                 predicate=None, plan: str = "static"):
         self.scat = scat
         self.mesh = scat.mesh
         self.saxis = scat.axis
@@ -110,15 +111,28 @@ class ShardedUnionSampler(JaxUnionSampler):
                          dead_rounds=dead_rounds, max_rounds=max_rounds,
                          surplus_cap=surplus_cap, stats=stats,
                          fused_rounds=fused_rounds, balance=balance,
-                         balance_slack=balance_slack, predicate=predicate)
+                         balance_slack=balance_slack, predicate=predicate,
+                         plan=plan)
         # per-shard cover-balanced draw widths; the global schedule (used by
         # the stats accounting) is world× that, and collapses to the
         # unsharded schedule on a 1-device mesh (bitwise-parity pin)
         base = np.maximum(np.asarray(cover.selection_probs(), np.float64), 0)
         self.shard_piece_batches = _piece_batches(
             base, self.shard_batch, balance, balance_slack)
+        if self.plan == "adaptive":
+            # demand-matched widths per shard (same rule as the unsharded
+            # engine at shard granularity), so the world× global schedule
+            # stays an exact multiple of the per-shard draw widths and
+            # collapses to the unsharded one on a 1-device mesh
+            self.shard_piece_batches = planner.alloc_batches(
+                self.shard_piece_batches, base,
+                planner.seed_rates(cover, self._tree_specs())[:, 0],
+                planner.adaptive_slot(self.shard_batch))
         self.piece_batches = tuple(self.world * b
                                    for b in self.shard_piece_batches)
+        # the planner constants derive from piece_batches, which this
+        # subclass just rescaled — rebuild them on the global schedule
+        self._setup_planner()
         self.strees = [scat.trees[n] for n in self.order]
         self.smems = [scat.members[n] for n in self.order]
         self._dtrees = [t.tree for t in self.strees]
@@ -141,26 +155,40 @@ class ShardedUnionSampler(JaxUnionSampler):
 
     # -- the shard-local round core (traceable) -------------------------------
     def _shard_round_core(self, key: jax.Array, probs_cum, carry_need,
-                          extra_target, st, sid):
+                          extra_target, st, sid, ema=None, gcount=None):
         """One round on one shard: replicated picks, local draws, the
         fingerprint exchange, local acceptance + matrix compaction.
 
         Returns ``(mats, okc, resc, accc, predc, need)`` where ``mats[j]``
         is this shard's accepted-compacted ``(B_j, A+1)`` row matrix and the
         count vectors are per-shard; ``need`` is the replicated global
-        target.
+        target.  Under ``plan="adaptive"`` the replicated EMAs and global
+        bank occupancy come in, the replicated **global** budget goes out as
+        a seventh element, and each shard draws its near-equal split of it.
         """
         nj = len(self.order)
         world = self.world
+        adaptive = self.plan == "adaptive"
         bs = self.shard_piece_batches
         kpick, *jks = jax.random.split(key, nj + 1)
         # (1) replicated multinomial cover selection over all global slots
-        u = jax.random.uniform(kpick, (self.round_batch,))
+        u = jax.random.uniform(kpick, (self._slot_width,))
         pick = jnp.clip(jnp.searchsorted(probs_cum, u, side="right"
                                          ).astype(jnp.int32), 0, nj - 1)
-        valid = (jnp.arange(self.round_batch)
+        valid = (jnp.arange(self._slot_width)
                  < extra_target).astype(jnp.int32)
         need = carry_need + jnp.zeros((nj,), jnp.int32).at[pick].add(valid)
+        gbudget = bshard = None
+        if adaptive:
+            # replicated global budget from replicated counts (no
+            # collectives), split across shards so the per-shard shares sum
+            # exactly to the global budget; world=1 degenerates to the
+            # unsharded budget bit for bit
+            gbudget = planner.budget_for(
+                need, gcount, ema[:, 0],
+                jnp.asarray(self._pbatch_i32), self._drain_w, jnp)
+            bshard = (gbudget // world
+                      + (sid < (gbudget % world)).astype(jnp.int32))
 
         # (2) local i.i.d. whole-join draws (replicated roots, per-shard
         # fold-in keys; §8.2 residual edges verify locally — their sorted
@@ -174,6 +202,10 @@ class ShardedUnionSampler(JaxUnionSampler):
                   else jax.random.fold_in(jks[j], sid))
             rows, ok, wok = self._dtrees[j].draw_with_root(
                 kd, bs[j], prefix, cols, rst["n_root"][0])
+            if bshard is not None:
+                elig = jnp.arange(bs[j]) < bshard[j]
+                ok = ok & elig
+                wok = wok & elig
             rows_j.append(rows)
             ok_j.append(ok)
             wok_j.append(wok)
@@ -216,10 +248,13 @@ class ShardedUnionSampler(JaxUnionSampler):
                         .at[dst].set(mat, mode="drop"))
             okc.append(jnp.sum(wok_j[j]))
             accc.append(jnp.sum(acc))
-        return (mats, jnp.stack(okc).astype(jnp.int32),
-                jnp.stack(resc).astype(jnp.int32),
-                jnp.stack(accc).astype(jnp.int32),
-                jnp.stack(predc).astype(jnp.int32), need)
+        out = (mats, jnp.stack(okc).astype(jnp.int32),
+               jnp.stack(resc).astype(jnp.int32),
+               jnp.stack(accc).astype(jnp.int32),
+               jnp.stack(predc).astype(jnp.int32), need)
+        if adaptive:
+            out = out + (gbudget.astype(jnp.int32),)
+        return out
 
     def _exchange_probes(self, rows_j, st, sid):
         """All earlier-piece membership probes in one collective exchange.
@@ -286,30 +321,59 @@ class ShardedUnionSampler(JaxUnionSampler):
     # -- host-mode round program (fused_rounds="host") ------------------------
     def _build_round_prog(self):
         mesh, axis = self.mesh, self.saxis
+        adaptive = self.plan == "adaptive"
 
-        def round_fn(probs_base, dead, carry_need, extra_target, key, st):
-            sid = jax.lax.axis_index(axis)
-            probs_cum, bad = _cover_cum(probs_base, dead)
-            mats, okc, resc, accc, predc, need = self._shard_round_core(
-                key, probs_cum, carry_need, extra_target, st, sid)
-            return ([m[None] for m in mats], okc[None], resc[None],
-                    accc[None], predc[None], need[None], bad[None])
+        if adaptive:
+            def round_fn(probs_base, dead, carry_need, extra_target, key,
+                         st, ema, gcount):
+                sid = jax.lax.axis_index(axis)
+                probs_cum, bad = _cover_cum(probs_base, dead)
+                mats, okc, resc, accc, predc, need, gb = \
+                    self._shard_round_core(key, probs_cum, carry_need,
+                                           extra_target, st, sid, ema,
+                                           gcount)
+                return ([m[None] for m in mats], okc[None], resc[None],
+                        accc[None], predc[None], need[None], gb[None],
+                        bad[None])
+
+            in_specs = (P(), P(), P(), P(), P(), P(axis), P(), P())
+        else:
+            def round_fn(probs_base, dead, carry_need, extra_target, key,
+                         st):
+                sid = jax.lax.axis_index(axis)
+                probs_cum, bad = _cover_cum(probs_base, dead)
+                mats, okc, resc, accc, predc, need = self._shard_round_core(
+                    key, probs_cum, carry_need, extra_target, st, sid)
+                return ([m[None] for m in mats], okc[None], resc[None],
+                        accc[None], predc[None], need[None], bad[None])
+
+            in_specs = (P(), P(), P(), P(), P(), P(axis))
 
         return jax.jit(shard_map(
             round_fn, mesh=mesh,
-            in_specs=(P(), P(), P(), P(), P(), P(axis)),
+            in_specs=in_specs,
             out_specs=P(axis), check_rep=False))
 
     def _sharded_round(self, probs_base, dead, carry_need, extra_target,
-                       key):
+                       key, ema=None, bank_count=None):
         """Run one mesh round; adapt it to the host-loop contract.
 
         ``cols[j]``'s first ``accc[j]`` rows are the accepted rows in
         shard-major order — the same consumption order the device loop's
-        water-filling allocation uses for fresh rows.
+        water-filling allocation uses for fresh rows.  ``bank_count`` under
+        ``plan="adaptive"`` is the host loop's *global* bank occupancy — the
+        same quantity the device loop carries replicated as ``gcount``.
         """
-        mats, okc, resc, accc, predc, need, bad = self._round_prog(
-            probs_base, dead, carry_need, extra_target, key, self._state)
+        budget = None
+        if self.plan == "adaptive":
+            (mats, okc, resc, accc, predc, need, budget,
+             bad) = self._round_prog(
+                probs_base, dead, carry_need, extra_target, key,
+                self._state, ema, bank_count)
+            budget = np.asarray(budget)[0]
+        else:
+            mats, okc, resc, accc, predc, need, bad = self._round_prog(
+                probs_base, dead, carry_need, extra_target, key, self._state)
         okc = np.asarray(okc)
         resc = np.asarray(resc)
         accc = np.asarray(accc)                     # (world, nj)
@@ -328,15 +392,17 @@ class ShardedUnionSampler(JaxUnionSampler):
                 g[pos:pos + a] = m[s, :a]
                 pos += a
             cols.append(g)
-        return (cols, okc.sum(axis=0), resc.sum(axis=0), accc.sum(axis=0),
-                predc.sum(axis=0), np.asarray(need)[0],
-                bool(np.asarray(bad)[0]))
+        out = (cols, okc.sum(axis=0), resc.sum(axis=0), accc.sum(axis=0),
+               predc.sum(axis=0), np.asarray(need)[0])
+        if budget is not None:
+            out = out + (budget,)
+        return out + (bool(np.asarray(bad)[0]),)
 
     # -- the persistent device loop (fused_rounds="device") -------------------
     def _init_state(self):
         nj = len(self.order)
         cap = max(1, self.surplus_cap // self.world)
-        return {
+        st = {
             "key": self.key,
             "owed": jnp.zeros(nj, jnp.int32),
             "dead": jnp.zeros(nj, dtype=bool),
@@ -346,6 +412,12 @@ class ShardedUnionSampler(JaxUnionSampler):
             "bank_head": jnp.zeros((self.world, nj), jnp.int32),
             "bank_count": jnp.zeros((self.world, nj), jnp.int32),
         }
+        if self.plan == "adaptive":
+            st["ema"] = jnp.asarray(self._ema_seed)
+            # replicated global bank occupancy at round start (the per-shard
+            # counts are sharded carry, so the budget reads this instead)
+            st["gcount"] = jnp.zeros(nj, jnp.int32)
+        return st
 
     def _out_buffer(self, C: int):
         """Per-shard output buffers: each shard scatters its rows at their
@@ -361,11 +433,13 @@ class ShardedUnionSampler(JaxUnionSampler):
         cap = max(1, self.surplus_cap // world)
         W = min(self._drain_w, cap)
         bt = int(sum(self.piece_batches))
+        adaptive = self.plan == "adaptive"
         max_rounds = jnp.int32(self.max_rounds)
         dead_rounds = jnp.int32(self.dead_rounds)
         st_global = self._state
 
         pbatch = jnp.asarray(self.piece_batches, jnp.int32)
+        shifts = jnp.asarray(self._ema_shifts)
 
         def loop_fn(shr, rep, out, n, probs_base, st):
             sid = jax.lax.axis_index(axis)
@@ -376,14 +450,22 @@ class ShardedUnionSampler(JaxUnionSampler):
 
             def body(c):
                 (key, owed, dead, streak, bank, head, count, out,
-                 total, rounds, fail, stats, pstats) = c
+                 total, rounds, fail, stats, pstats) = c[:13]
                 probs_cum, bad = _cover_cum(probs_base, dead)
                 key2, kround = jax.random.split(key)
                 extra = jnp.clip(n - total - jnp.sum(owed),
-                                 0, self.round_batch)
-                (mats, okc_s, resc_s, accc_s, predc_s,
-                 need) = self._shard_round_core(
-                    kround, probs_cum, owed, extra, st, sid)
+                                 0, self._slot_width)
+                if adaptive:
+                    ema, gcount = c[13], c[14]
+                    (mats, okc_s, resc_s, accc_s, predc_s, need,
+                     gb) = self._shard_round_core(
+                        kround, probs_cum, owed, extra, st, sid, ema,
+                        gcount)
+                else:
+                    gb = None
+                    (mats, okc_s, resc_s, accc_s, predc_s,
+                     need) = self._shard_round_core(
+                        kround, probs_cum, owed, extra, st, sid)
                 # one tiny exchange: per-shard (bank count, accepted, ok,
                 # residual, predicate-reject) matrices — every shard then
                 # computes the same global water-filling allocation AND its
@@ -430,26 +512,40 @@ class ShardedUnionSampler(JaxUnionSampler):
                 newly = ~dead & (streak2 >= dead_rounds)
                 dropped = dropped + jnp.sum(jnp.where(newly, shortfall, 0))
                 shortfall = jnp.where(newly, 0, shortfall)
+                drawn = jnp.sum(gb) if adaptive else jnp.int32(bt)
                 stats2 = stats + jnp.stack(
-                    [jnp.int32(bt), jnp.int32(bt),
+                    [drawn.astype(jnp.int32), drawn.astype(jnp.int32),
                      (okg - resg - predg - jnp.sum(accg_v))
                      .astype(jnp.int32),
                      resg.astype(jnp.int32),
                      predg.astype(jnp.int32),
                      dropped.astype(jnp.int32)])
                 pstats2 = jnp.stack(
-                    [pstats[:, 0] + pbatch,
+                    [pstats[:, 0] + (gb if adaptive else pbatch),
                      pstats[:, 1] + accg_v.astype(jnp.int32),
                      pstats[:, 2] + jnp.sum(gat[:, 3], axis=0)
                                        .astype(jnp.int32),
                      pstats[:, 3] + dtg.astype(jnp.int32),
                      jnp.maximum(pstats[:, 4], countg2.astype(jnp.int32))],
                     axis=1)
-                return (key2, shortfall.astype(jnp.int32), dead | newly,
-                        streak2.astype(jnp.int32), bank2,
-                        head2.astype(jnp.int32), count2.astype(jnp.int32),
-                        out2, total2, rounds + 1, fail | bad, stats2,
-                        pstats2)
+                nxt = (key2, shortfall.astype(jnp.int32), dead | newly,
+                       streak2.astype(jnp.int32), bank2,
+                       head2.astype(jnp.int32), count2.astype(jnp.int32),
+                       out2, total2, rounds + 1, fail | bad, stats2,
+                       pstats2)
+                if adaptive:
+                    # EMA step from the already-gathered global counts —
+                    # zero extra collectives; the post-round global bank
+                    # occupancy doubles as next round's budget input
+                    okg_v = jnp.sum(gat[:, 2], axis=0)
+                    resg_v = jnp.sum(gat[:, 3], axis=0)
+                    predg_v = jnp.sum(gat[:, 4], axis=0)
+                    counts4 = jnp.stack(
+                        [accg_v, okg_v, resg_v, predg_v],
+                        axis=1).astype(jnp.int32)
+                    ema2 = planner.ema_update(ema, gb, counts4, shifts, jnp)
+                    nxt = nxt + (ema2, countg2.astype(jnp.int32))
+                return nxt
 
             init = (rep["key"], rep["owed"], rep["dead"], rep["streak"],
                     shr["bank"][0], shr["bank_head"][0],
@@ -458,19 +554,28 @@ class ShardedUnionSampler(JaxUnionSampler):
                     jnp.zeros(len(_STAT_FIELDS), jnp.int32),
                     jnp.zeros((len(self.order), len(PIECE_STAT_FIELDS)),
                               jnp.int32))
+            if adaptive:
+                init = init + (rep["ema"], rep["gcount"])
+            fin = jax.lax.while_loop(cond, body, init)
             (key, owed, dead, streak, bank, head, count, out2,
-             total, rounds, fail, stats, pstats) = jax.lax.while_loop(
-                cond, body, init)
+             total, rounds, fail, stats, pstats) = fin[:13]
+            rep2 = {"key": key[None], "owed": owed[None],
+                    "dead": dead[None], "streak": streak[None]}
+            if adaptive:
+                rep2["ema"] = fin[13][None]
+                rep2["gcount"] = fin[14][None]
             return ({"bank": bank[None], "bank_head": head[None],
                      "bank_count": count[None]},
-                    {"key": key[None], "owed": owed[None],
-                     "dead": dead[None], "streak": streak[None]},
+                    rep2,
                     out2[None], total[None], rounds[None], fail[None],
                     stats[None], pstats[None])
 
         shr_spec = {"bank": P(axis), "bank_head": P(axis),
                     "bank_count": P(axis)}
-        rep_spec = {"key": P(), "owed": P(), "dead": P(), "streak": P()}
+        rep_keys = ("key", "owed", "dead", "streak")
+        if adaptive:
+            rep_keys = rep_keys + ("ema", "gcount")
+        rep_spec = {k: P() for k in rep_keys}
         prog = jax.jit(shard_map(
             loop_fn, mesh=mesh,
             in_specs=(shr_spec, rep_spec, P(axis), P(), P(), P(axis)),
@@ -479,7 +584,7 @@ class ShardedUnionSampler(JaxUnionSampler):
 
         def run(state, out, n, probs_base):
             shr = {k: state[k] for k in ("bank", "bank_head", "bank_count")}
-            rep = {k: state[k] for k in ("key", "owed", "dead", "streak")}
+            rep = {k: state[k] for k in rep_keys}
             shr2, rep2, out2, total, rounds, fail, stats, pstats = prog(
                 shr, rep, out, n, probs_base, st_global)
             state2 = dict(shr2)

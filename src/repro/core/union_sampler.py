@@ -74,9 +74,20 @@ class SamplerStats:
     reuse_accepts: int = 0
     reuse_rejects: int = 0
     backtrack_removed: int = 0
+    samples_emitted: int = 0       # denominator of psi(): rows handed out
 
     def as_dict(self) -> Dict[str, int]:
         return dataclasses.asdict(self)
+
+    def psi(self) -> float:
+        """ψ of §3.3 as a ratio: candidate draws per emitted sample.
+
+        1.0 is the no-waste optimum; the adaptive round planner drives the
+        fused engines toward it.  0.0 until anything has been emitted.
+        """
+        if self.samples_emitted <= 0:
+            return 0.0
+        return self.candidate_draws / self.samples_emitted
 
     def merge(self, other: "SamplerStats") -> "SamplerStats":
         """Associative in-place merge (counter sum); returns ``self``.
@@ -181,6 +192,7 @@ class DisjointUnionSampler:
         rows = {a: c[perm] for a, c in rows.items()}
         fp = fingerprint128([rows[a] for a in sorted(self.attrs)])
         self.stats.iterations += n
+        self.stats.samples_emitted += n
         return SampleSet(self.attrs, rows, home[perm], fp, self.stats)
 
 
@@ -240,6 +252,7 @@ class BernoulliUnionSampler:
         rows = {a: c[:n] for a, c in rows_concat(acc_rows).items()}
         home = np.asarray(acc_home[:n], dtype=np.int64)
         fp = fingerprint128([rows[a] for a in sorted(self.attrs)])
+        self.stats.samples_emitted += n
         return SampleSet(self.attrs, rows, home, fp, self.stats)
 
 
@@ -252,10 +265,13 @@ class SetUnionSampler:
                  seed: int = 0, retry_rounds: int = 64,
                  candidate_batch: int = 32, predicate=None,
                  backend: str | Backend = "numpy",
-                 round_batch: int = 4096, mesh=None,
-                 fused_rounds: str = "device"):
+                 round_batch: Optional[int] = 4096, mesh=None,
+                 fused_rounds: str = "device", plan: str = "static"):
         if membership not in ("probe", "record"):
             raise ValueError("membership must be 'probe' or 'record'")
+        if plan not in ("static", "adaptive"):
+            raise ValueError("plan must be 'static' or 'adaptive', got "
+                             f"{plan!r}")
         self.cat = cat
         self.joins = list(joins)
         self.by_name = {j.name: j for j in self.joins}
@@ -322,6 +338,21 @@ class SetUnionSampler:
                 obs.record_fallback("predicate_unsupported", detail=reason,
                                     join=j.name)
                 fused = False
+        # round_batch=None consults the autotuning cost model
+        # (planner.PLAN_CACHE, fed by timed device calls this process) and
+        # falls back to the 4096 default while the cache is cold
+        self.autotuned_plan = None
+        engine_surplus_cap = None
+        if round_batch is None:
+            from . import planner as _planner
+            self.autotuned_plan = _planner.PLAN_CACHE.suggest(
+                _planner.plan_key(cat, self.joins, cover))
+            if self.autotuned_plan is not None:
+                round_batch = self.autotuned_plan.round_batch
+                engine_surplus_cap = self.autotuned_plan.surplus_cap
+            else:
+                round_batch = 4096
+        self.plan = plan
         if fused:
             if membership == "record" and mesh is not None:
                 raise ValueError(
@@ -334,20 +365,23 @@ class SetUnionSampler:
                                       backend=self.backend)
                 self._engine = ShardedUnionSampler(
                     scat, cover, seed=seed, round_batch=round_batch,
+                    surplus_cap=engine_surplus_cap,
                     stats=self.stats, fused_rounds=fused_rounds,
-                    predicate=predicate)
+                    predicate=predicate, plan=plan)
             elif membership == "record":
                 from .backends.jax_backend import JaxRecordUnionSampler
                 self._engine = JaxRecordUnionSampler(
                     self.backend, cover, seed=seed, round_batch=round_batch,
+                    surplus_cap=engine_surplus_cap,
                     stats=self.stats, fused_rounds=fused_rounds,
-                    predicate=predicate)
+                    predicate=predicate, plan=plan)
             else:
                 from .backends.jax_backend import JaxUnionSampler
                 self._engine = JaxUnionSampler(
                     self.backend, cover, seed=seed, round_batch=round_batch,
+                    surplus_cap=engine_surplus_cap,
                     stats=self.stats, fused_rounds=fused_rounds,
-                    predicate=predicate)
+                    predicate=predicate, plan=plan)
 
     # ------------------------------------------------------------------ util
     @property
@@ -480,6 +514,7 @@ class SetUnionSampler:
         perm = self.rng.permutation(home.shape[0])
         rows = {a: c[perm] for a, c in rows.items()}
         fp = fingerprint128([rows[a] for a in sorted(self.attrs)])
+        self.stats.samples_emitted += n
         return SampleSet(self.attrs, rows, home[perm], fp, self.stats)
 
     # -- record mode / strict paper loop: faithful sequential Alg 1 ----------
@@ -543,4 +578,5 @@ class SetUnionSampler:
                 for a in self.attrs}
         home = np.asarray(out_home[:n], dtype=np.int64)
         fp = fingerprint128([rows[a] for a in sorted(self.attrs)])
+        self.stats.samples_emitted += n
         return SampleSet(self.attrs, rows, home, fp, self.stats)

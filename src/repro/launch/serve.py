@@ -55,7 +55,8 @@ def serve_samples(args) -> None:
         mesh = make_sampler_mesh(world=args.shards)
     sampler = SetUnionSampler(wl.cat, wl.joins, est.cover, seed=args.seed,
                               backend=args.backend,
-                              round_batch=args.round_batch, mesh=mesh)
+                              round_batch=args.round_batch, mesh=mesh,
+                              plan=args.plan)
     sampler.sample(256)                     # warm up / compile
     metrics = None
     if args.metrics_port is not None:
@@ -83,7 +84,8 @@ def serve_samples(args) -> None:
               f"({served} total) in {dt:.2f}s — "
               f"{served/max(dt, 1e-9):,.0f} samples/s "
               f"[backend={args.backend}{shard_note}; "
-              f"psi={st.candidate_draws}, rejects={st.cover_rejects}]",
+              f"psi={st.psi():.2f}, draws={st.candidate_draws}, "
+              f"rejects={st.cover_rejects}]",
               flush=True)
         from .. import obs
         if obs.enabled():
@@ -113,6 +115,10 @@ def main(argv: Optional[list] = None) -> None:
     ap.add_argument("--samples", type=int, default=4096)
     ap.add_argument("--backend", default="jax")
     ap.add_argument("--round-batch", type=int, default=8192)
+    ap.add_argument("--plan", choices=("static", "adaptive"),
+                    default="static",
+                    help="round planner: 'adaptive' budgets candidates by "
+                         "acceptance EMAs inside the device loop")
     ap.add_argument("--shards", type=int, default=0,
                     help="mesh size for the sharded engine (0 = unsharded)")
     ap.add_argument("--prefetch", type=int, default=2,

@@ -203,6 +203,8 @@ class SampleService:
                 for i, s in enumerate(self.samplers):
                     for field, v in s.stats.as_dict().items():
                         m["engine"].labels(str(i), field).set(v)
+                    # derived waste ratio: candidate draws per emitted sample
+                    m["engine"].labels(str(i), "psi").set(s.stats.psi())
 
             reg.add_collector(collect)
             self._collector = (reg, collect)

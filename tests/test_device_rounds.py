@@ -17,6 +17,7 @@ replaces.  Pinned here:
 """
 
 import numpy as np
+from _hypothesis_compat import given, settings, st
 from scipy import stats as sps
 
 from repro.core.backends import get_backend
@@ -85,6 +86,51 @@ def test_fifo_bank_ring_wrap_equivalence():
     for n in (333, 87, 512, 1025, 64):
         _assert_same_samples(dev.sample(n), host.sample(n))
     assert dev.stats.as_dict() == host.stats.as_dict()
+
+
+# ---------------------------------------------------------------------------
+# FIFO ring edges: cap-boundary wrap + the W=min(rb, 256) drain clamp at
+# rb < 256, = 256, and > 256 (property-tested over request sequences)
+# ---------------------------------------------------------------------------
+
+# engine pairs are module-cached: each property example continues the same
+# carry state, and the dev/host twins advance in lockstep so every prefix of
+# the request stream is itself a parity check
+_RING_PAIRS = {}
+
+
+def _ring_pair(rb, cap):
+    if (rb, cap) not in _RING_PAIRS:
+        wl = uq1(scale=0.02, overlap=0.4, seed=0, n_joins=2)
+        cover = _cover(wl)
+
+        def engine(mode):
+            backend = get_backend("jax", wl.cat, wl.joins, seed=3)
+            return JaxUnionSampler(backend, cover, seed=17, round_batch=rb,
+                                   surplus_cap=cap, fused_rounds=mode)
+
+        _RING_PAIRS[(rb, cap)] = (engine("device"), engine("host"))
+    return _RING_PAIRS[(rb, cap)]
+
+
+def test_drain_window_clamp_across_round_batches():
+    """W = min(rb, 256) on both sides of the clamp, including rb < 256."""
+    for rb, want in ((128, 128), (256, 256), (512, 256), (1024, 256)):
+        dev, _ = _ring_pair(rb, 48) if rb in (128, 512) else _ring_pair(rb, 64)
+        assert dev._drain_w == want == min(rb, 256)
+
+
+@settings(max_examples=4, deadline=None)
+@given(st.lists(st.integers(min_value=1, max_value=400),
+                min_size=1, max_size=3))
+def test_ring_bank_cap_wrap_property(ns):
+    """Tiny non-multiple caps force head wrap + push clipping at every
+    drain-clamp regime; the device ring must replay the host FIFO exactly."""
+    for rb, cap in ((128, 48), (256, 64), (512, 48)):
+        dev, host = _ring_pair(rb, cap)
+        for n in ns:
+            _assert_same_samples(dev.sample(n), host.sample(n))
+        assert dev.stats.as_dict() == host.stats.as_dict()
 
 
 # ---------------------------------------------------------------------------
