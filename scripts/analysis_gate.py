@@ -1,0 +1,158 @@
+#!/usr/bin/env python
+"""Static invariant gate: AST lint + jaxpr/recompile audits, CI-gating.
+
+Three layers (see ``src/repro/analysis/``):
+
+* ``ast`` — stdlib-only source lint of ``src/repro`` (tracer-safe control
+  flow, host escapes, fixed-point discipline, determinism, int32 packing
+  guards, stats-vector widths, fallback accounting, lock discipline);
+* ``jaxpr`` — traces the real UQ1/UQ4 engines and checks device/host
+  primitive parity, collective discipline, and donated-carry aliasing;
+* ``recompile`` — drives the engines through mixed request sizes and
+  asserts one loop trace per capacity class and per (plan, mode).
+
+Findings already pinned in the baseline file (``analysis_baseline.json``,
+each entry carries a fingerprint and a one-line justification) are
+suppressed; everything else makes the gate exit non-zero.
+
+Usage::
+
+    python scripts/analysis_gate.py [paths...]           # default src/repro
+        [--baseline analysis_baseline.json]
+        [--layers ast,jaxpr,recompile]   # default: ast, plus the audit
+                                         # layers when jax is importable
+        [--require-jax]                  # fail (not skip) if jax missing
+        [--json] [--stats artifacts/analysis_stats.json] [--list-rules]
+
+Exit codes: 0 clean (modulo baseline), 1 active findings, 2 usage/internal
+error.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.analysis.findings import Baseline  # noqa: E402
+from repro.analysis.lint import run_lint  # noqa: E402
+from repro.analysis.rules import rule_catalog  # noqa: E402
+
+_ALL_LAYERS = ("ast", "jaxpr", "recompile")
+
+
+def _jax_available() -> bool:
+    try:
+        import jax  # noqa: F401
+        return True
+    except Exception:
+        return False
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("paths", nargs="*", default=None,
+                    help="files/dirs to lint (default: src/repro)")
+    ap.add_argument("--baseline", default=None,
+                    help="baseline JSON of justified, suppressed findings")
+    ap.add_argument("--layers", default=None,
+                    help="comma list from {ast,jaxpr,recompile}")
+    ap.add_argument("--require-jax", action="store_true",
+                    help="fail instead of skipping audit layers without jax")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="emit findings as JSON on stdout")
+    ap.add_argument("--stats", metavar="PATH", default=None,
+                    help="write a findings-count JSON artifact to PATH")
+    ap.add_argument("--list-rules", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for entry in sorted(rule_catalog(), key=lambda e: e["name"]):
+            print(f"{entry['name']:18s} {entry['description']}")
+        return 0
+
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    paths = args.paths or [os.path.join(repo, "src", "repro")]
+
+    if args.layers:
+        layers = tuple(s.strip() for s in args.layers.split(",") if s.strip())
+        bad = set(layers) - set(_ALL_LAYERS)
+        if bad:
+            print(f"unknown layers: {sorted(bad)}", file=sys.stderr)
+            return 2
+    elif args.require_jax or _jax_available():
+        layers = _ALL_LAYERS
+    else:
+        layers = ("ast",)
+
+    skipped = []
+    audit_layers = [l for l in layers if l != "ast"]
+    if audit_layers and not _jax_available():
+        if args.require_jax:
+            print("jax is required for the jaxpr/recompile layers but is "
+                  "not importable", file=sys.stderr)
+            return 2
+        skipped = audit_layers
+        layers = tuple(l for l in layers if l == "ast")
+
+    findings = []
+    reports = []
+    if "ast" in layers:
+        findings.extend(run_lint(paths))
+    if "jaxpr" in layers:
+        from repro.analysis.jaxpr_audit import run_jaxpr_audit
+        f, r = run_jaxpr_audit()
+        findings.extend(f)
+        reports.extend(r)
+    if "recompile" in layers:
+        from repro.analysis.recompile import run_recompile_audit
+        f, r = run_recompile_audit()
+        findings.extend(f)
+        reports.extend(r)
+
+    baseline = Baseline.load(args.baseline) if args.baseline else Baseline()
+    active, suppressed = baseline.split(findings)
+    stale = baseline.stale(findings)
+
+    by_rule = {}
+    for f in findings:
+        by_rule[f.rule] = by_rule.get(f.rule, 0) + 1
+    stats = {
+        "layers": list(layers), "skipped_layers": skipped,
+        "total": len(findings), "active": len(active),
+        "suppressed": len(suppressed), "stale_baseline": len(stale),
+        "by_rule": by_rule, "audits": reports,
+    }
+
+    if args.as_json:
+        print(json.dumps({
+            "stats": stats,
+            "findings": [f.to_dict() for f in active],
+            "suppressed": [f.to_dict() for f in suppressed],
+        }, indent=2))
+    else:
+        for f in active:
+            print(f.render())
+        if suppressed:
+            print(f"[baseline] {len(suppressed)} finding(s) suppressed")
+        for fp in stale:
+            print(f"[baseline] stale entry {fp}: no longer fires — "
+                  "remove it from the baseline")
+        if skipped:
+            print(f"[skip] layers {skipped} skipped: jax not importable")
+        print(f"analysis gate: {len(active)} active finding(s) across "
+              f"{len(layers)} layer(s)")
+
+    if args.stats:
+        os.makedirs(os.path.dirname(args.stats) or ".", exist_ok=True)
+        with open(args.stats, "w") as fh:
+            json.dump(stats, fh, indent=2)
+
+    return 1 if active else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,26 @@
+"""Static invariant analysis for the union-sampling engine.
+
+Three layers guard the invariants the runtime tests pin:
+
+* **Layer 1 — AST lint** (:mod:`repro.analysis.lint`,
+  :mod:`repro.analysis.rules`): stdlib-only rules over the ``src/repro``
+  tree — jit-boundary hazards (Python control flow on tracers, host
+  escapes), fixed-point discipline in the planner, nondeterminism in
+  traced code, int32 packed-key overflow guards, SamplerStats width
+  agreement across the host/device/sharded carries, and host-degrade
+  branches that forget ``record_fallback``.
+* **Layer 2 — jaxpr audit** (:mod:`repro.analysis.jaxpr_audit`,
+  :mod:`repro.analysis.recompile`): traces the real fused round programs
+  with abstract/cheap inputs and checks structural invariants without
+  sampling — device-vs-host-twin primitive inventories (RNG parity, no
+  stray collectives), shard_map collective count consistency, donated
+  carry aliasing, and one-trace-per-capacity-class compile behaviour.
+* **Layer 3 — concurrency lint** (:mod:`repro.analysis.rules.locks`):
+  lock discipline for the serve tier and the obs registry.
+
+Layers 1 and 3 import only the standard library so the CI gate can run
+them without jax installed; layer 2 imports jax lazily.
+"""
+
+from .findings import Baseline, Finding  # noqa: F401
+from .lint import run_lint  # noqa: F401

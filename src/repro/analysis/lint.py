@@ -1,0 +1,339 @@
+"""Layer-1 lint engine: module loading, traced-context index, rule runner.
+
+Everything here is stdlib-only (``ast`` + friends) so the CI gate can run
+the AST layers on a bare interpreter, before jax is installed.
+
+Traced-context detection
+------------------------
+A function is considered *traced* (its body runs under a jax trace, so
+host-side Python semantics are hazards) when any of these hold:
+
+* it is decorated with ``jit`` / ``jax.jit`` / ``pjit`` / ``partial(jit)``;
+* it is passed (as a ``Name`` or ``self.method`` reference) into a trace
+  entry point: ``jax.jit``, ``lax.while_loop`` / ``scan`` / ``cond`` /
+  ``fori_loop``, ``shard_map``, ``vmap`` / ``pmap``, ``grad``,
+  ``make_jaxpr``, ``checkpoint``;
+* its ``def`` line (or the line above) carries an ``# analysis: traced``
+  marker — the annotation hook for functions whose traced-ness is only
+  visible across modules (e.g. tree-draw methods jitted by callers);
+* it is defined inside, or called from, a traced function (transitive
+  closure over same-module calls: bare ``f(...)`` to a sibling def, or
+  ``self.m(...)`` to a method of the enclosing class).
+
+Inline suppression: a line carrying ``# analysis: allow(rule-name)`` (or
+``allow(*)``) suppresses findings of that rule anchored to that line.
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+import re
+from typing import Dict, Iterable, Iterator, List, Optional, Sequence, Set
+
+from .findings import Finding
+
+TRACE_ENTRY_TAILS = {
+    "jit", "pjit", "while_loop", "scan", "cond", "fori_loop", "shard_map",
+    "vmap", "pmap", "grad", "value_and_grad", "make_jaxpr", "checkpoint",
+    "custom_jvp", "custom_vjp",
+}
+JIT_DECORATOR_TAILS = {"jit", "pjit"}
+
+_ALLOW_RE = re.compile(r"#\s*analysis:\s*allow\(([^)]*)\)")
+_MARK_RE = re.compile(r"#\s*analysis:\s*(traced|fixed-point)\b")
+
+
+def attr_tail(node: ast.AST) -> Optional[str]:
+    """Last segment of a Name / dotted-attribute expression, else None."""
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.Name):
+        return node.id
+    return None
+
+
+def attr_chain(node: ast.AST) -> str:
+    """Render ``a.b.c`` chains (best effort) for messages."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+    return ".".join(reversed(parts))
+
+
+class SourceModule:
+    """One parsed file plus navigation helpers shared by all rules."""
+
+    def __init__(self, path: str, rel: str, text: str):
+        self.path = path
+        self.rel = rel
+        self.text = text
+        self.lines = text.splitlines()
+        self.tree = ast.parse(text, filename=path)
+        self._parents: Dict[int, ast.AST] = {}
+        for node in ast.walk(self.tree):
+            for child in ast.iter_child_nodes(node):
+                self._parents[id(child)] = node
+        self.defs: List[ast.FunctionDef] = [
+            n for n in ast.walk(self.tree)
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]
+        self.classes: List[ast.ClassDef] = [
+            n for n in ast.walk(self.tree) if isinstance(n, ast.ClassDef)]
+        self._traced: Optional[Set[int]] = None
+
+    # -- navigation -----------------------------------------------------------
+    def parent(self, node: ast.AST) -> Optional[ast.AST]:
+        return self._parents.get(id(node))
+
+    def ancestors(self, node: ast.AST) -> Iterator[ast.AST]:
+        cur = self.parent(node)
+        while cur is not None:
+            yield cur
+            cur = self.parent(cur)
+
+    def enclosing_function(self, node: ast.AST
+                           ) -> Optional[ast.FunctionDef]:
+        for a in self.ancestors(node):
+            if isinstance(a, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                return a
+        return None
+
+    def enclosing_class(self, node: ast.AST) -> Optional[ast.ClassDef]:
+        for a in self.ancestors(node):
+            if isinstance(a, ast.ClassDef):
+                return a
+        return None
+
+    def qualname(self, node: ast.AST) -> str:
+        parts: List[str] = []
+        cur: Optional[ast.AST] = node
+        while cur is not None:
+            if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                ast.ClassDef)):
+                parts.append(cur.name)
+            cur = self.parent(cur)
+        return ".".join(reversed(parts)) or "<module>"
+
+    def scope_of(self, node: ast.AST) -> str:
+        fn = self.enclosing_function(node)
+        if fn is not None:
+            return self.qualname(fn)
+        cls = self.enclosing_class(node)
+        if cls is not None:
+            return self.qualname(cls)
+        return "<module>"
+
+    # -- source markers -------------------------------------------------------
+    def line_text(self, lineno: int) -> str:
+        if 1 <= lineno <= len(self.lines):
+            return self.lines[lineno - 1]
+        return ""
+
+    def has_marker(self, node: ast.AST, marker: str) -> bool:
+        """``# analysis: <marker>`` on the node's line or the line above."""
+        for ln in (node.lineno, node.lineno - 1):
+            m = _MARK_RE.search(self.line_text(ln))
+            if m and m.group(1) == marker:
+                return True
+        return False
+
+    def allowed_rules(self, lineno: int) -> Set[str]:
+        m = _ALLOW_RE.search(self.line_text(lineno))
+        if not m:
+            return set()
+        return {tok.strip() for tok in m.group(1).split(",") if tok.strip()}
+
+    # -- traced-context index -------------------------------------------------
+    def traced_functions(self) -> Set[int]:
+        """ids of FunctionDef nodes whose bodies run under a jax trace."""
+        if self._traced is not None:
+            return self._traced
+        traced: Set[int] = set()
+
+        def mark(fn: Optional[ast.AST]) -> None:
+            if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                traced.add(id(fn))
+
+        # (1) decorators + explicit markers
+        for fn in self.defs:
+            if self.has_marker(fn, "traced"):
+                mark(fn)
+                continue
+            for dec in fn.decorator_list:
+                target = dec.func if isinstance(dec, ast.Call) else dec
+                tail = attr_tail(target)
+                if tail in JIT_DECORATOR_TAILS:
+                    mark(fn)
+                elif tail == "partial" and isinstance(dec, ast.Call):
+                    if dec.args and attr_tail(dec.args[0]) in JIT_DECORATOR_TAILS:
+                        mark(fn)
+
+        # (2) function references passed into trace entry points
+        for call in ast.walk(self.tree):
+            if not isinstance(call, ast.Call):
+                continue
+            if attr_tail(call.func) not in TRACE_ENTRY_TAILS:
+                continue
+            for arg in list(call.args) + [kw.value for kw in call.keywords]:
+                self._mark_fn_ref(arg, call, mark)
+
+        # (3) transitive closure: nested defs + same-module calls
+        changed = True
+        while changed:
+            changed = False
+            before = len(traced)
+            for fn in self.defs:
+                if id(fn) not in traced:
+                    continue
+                # nested defs trace with their parent
+                for node in ast.walk(fn):
+                    if node is not fn and isinstance(
+                            node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                        mark(node)
+                # calls out of traced code
+                for node in ast.walk(fn):
+                    if not isinstance(node, ast.Call):
+                        continue
+                    callee = self._resolve_callee(node, fn)
+                    if callee is not None:
+                        mark(callee)
+            changed = len(traced) != before
+
+        self._traced = traced
+        return traced
+
+    def _mark_fn_ref(self, arg: ast.AST, call: ast.Call, mark) -> None:
+        """Resolve a trace-entry argument to a local def / self-method."""
+        if isinstance(arg, ast.Call):
+            # functools.partial(fn, ...) — look at the wrapped callable
+            if attr_tail(arg.func) == "partial" and arg.args:
+                self._mark_fn_ref(arg.args[0], call, mark)
+            return
+        if isinstance(arg, ast.Name):
+            mark(self._lookup_def(arg.id, call))
+        elif (isinstance(arg, ast.Attribute)
+              and isinstance(arg.value, ast.Name)
+              and arg.value.id == "self"):
+            mark(self._lookup_method(arg.attr, call))
+
+    def _resolve_callee(self, call: ast.Call, site_fn: ast.AST
+                        ) -> Optional[ast.FunctionDef]:
+        f = call.func
+        if isinstance(f, ast.Name):
+            return self._lookup_def(f.id, call)
+        if (isinstance(f, ast.Attribute) and isinstance(f.value, ast.Name)
+                and f.value.id == "self"):
+            return self._lookup_method(f.attr, call)
+        return None
+
+    def _lookup_def(self, name: str, site: ast.AST
+                    ) -> Optional[ast.FunctionDef]:
+        """Nearest def named ``name`` in the site's enclosing scope chain."""
+        scopes: List[ast.AST] = []
+        fn = self.enclosing_function(site)
+        while fn is not None:
+            scopes.append(fn)
+            fn = self.enclosing_function(fn)
+        scopes.append(self.tree)
+        for scope in scopes:
+            body = scope.body if hasattr(scope, "body") else []
+            for stmt in body:
+                if (isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef))
+                        and stmt.name == name):
+                    return stmt
+        return None
+
+    def _lookup_method(self, name: str, site: ast.AST
+                       ) -> Optional[ast.FunctionDef]:
+        cls = self.enclosing_class(site)
+        if cls is None:
+            return None
+        for stmt in cls.body:
+            if (isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef))
+                    and stmt.name == name):
+                return stmt
+        return None
+
+    def in_traced(self, node: ast.AST) -> Optional[ast.FunctionDef]:
+        """The innermost traced function enclosing ``node``, if any."""
+        traced = self.traced_functions()
+        cur: Optional[ast.AST] = node
+        while cur is not None:
+            if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and id(cur) in traced:
+                return cur
+            cur = self.parent(cur)
+        return None
+
+
+class Rule:
+    """Base class: subclasses set ``name`` and override one of the hooks."""
+
+    name = "rule"
+    description = ""
+
+    def check_module(self, mod: SourceModule) -> Iterable[Finding]:
+        return ()
+
+    def check_project(self, mods: Sequence[SourceModule]
+                      ) -> Iterable[Finding]:
+        return ()
+
+
+def load_tree(root: str, rel_prefix: str = "") -> List[SourceModule]:
+    """Parse every ``*.py`` under ``root`` (sorted, skipping caches)."""
+    mods: List[SourceModule] = []
+    root = os.path.abspath(root)
+    if os.path.isfile(root):
+        with open(root, encoding="utf-8") as fh:
+            text = fh.read()
+        rel = os.path.join(rel_prefix, os.path.basename(root))
+        return [SourceModule(root, rel.replace(os.sep, "/"), text)]
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = sorted(d for d in dirnames if d != "__pycache__")
+        for fname in sorted(filenames):
+            if not fname.endswith(".py"):
+                continue
+            path = os.path.join(dirpath, fname)
+            rel = os.path.join(rel_prefix, os.path.relpath(path, root))
+            with open(path, encoding="utf-8") as fh:
+                text = fh.read()
+            mods.append(SourceModule(path, rel.replace(os.sep, "/"), text))
+    return mods
+
+
+def run_lint(paths: Sequence[str], rules: Optional[Sequence[Rule]] = None,
+             rel_prefixes: Optional[Sequence[str]] = None) -> List[Finding]:
+    """Run all (or the given) rules over the files/trees in ``paths``."""
+    if rules is None:
+        from .rules import all_rules
+        rules = all_rules()
+    mods: List[SourceModule] = []
+    for i, p in enumerate(paths):
+        if rel_prefixes:
+            prefix = rel_prefixes[i]
+        elif os.path.isfile(p):
+            prefix = ""              # a file already names itself
+        else:
+            prefix = os.path.basename(os.path.abspath(p))
+        mods.extend(load_tree(p, rel_prefix=prefix))
+    findings: List[Finding] = []
+    for rule in rules:
+        for mod in mods:
+            findings.extend(rule.check_module(mod))
+        findings.extend(rule.check_project(mods))
+    # inline `# analysis: allow(rule)` suppression at the finding's line
+    by_rel = {m.rel: m for m in mods}
+    kept: List[Finding] = []
+    for f in findings:
+        mod = by_rel.get(f.path)
+        if mod is not None:
+            allowed = mod.allowed_rules(f.line)
+            if f.rule in allowed or "*" in allowed:
+                continue
+        kept.append(f)
+    kept.sort(key=lambda f: (f.path, f.line, f.rule))
+    return kept

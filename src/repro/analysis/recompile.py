@@ -1,0 +1,91 @@
+"""Layer 2b: compile-cache audit — one trace per capacity class.
+
+The device loop is compiled per output-capacity class ``C`` (the
+power-of-two padding of the request size, floored at 1024) and cached
+under ``(C, plan, fused_rounds)``.  Every extra trace is a multi-second
+XLA compile stall on the serving path, so the invariant worth gating on
+is: across any mix of request sizes, the engine traces its loop exactly
+once per distinct capacity class, and never again for repeated sizes.
+
+The engines append ``("loop", C, plan)`` to ``_trace_events`` inside the
+pre-jit loop body — i.e. exactly once per *trace*, not per call — which
+is what this audit counts.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Iterable, List, Sequence, Tuple
+
+from .findings import Finding
+
+
+def capacity_class(n: int) -> int:
+    """Output-capacity class for a request of ``n`` rows (mirrors the
+    engine: next power of two, floored at 1024)."""
+    return 1 << max(10, (int(n) - 1).bit_length())
+
+
+def _finding(label: str, message: str, detail: str) -> Finding:
+    return Finding(rule="recompile", path=f"<audit:{label}>", line=0,
+                   scope=label, message=message, detail=detail)
+
+
+def audit_recompile_engine(eng, label: str,
+                           sizes: Sequence[int] = (200, 300, 1400, 1500, 300)
+                           ) -> Tuple[List[Finding], Dict[str, Any]]:
+    """Drive one engine through a mix of request sizes and count traces.
+
+    ``sizes`` deliberately repeats a capacity class (200/300 → C=1024,
+    1400/1500 → C=2048, then 300 again) so a cache keyed on anything
+    finer than the capacity class shows up as a duplicate trace event.
+    """
+    eng._trace_events.clear()
+    for n in sizes:
+        eng.sample(n)
+    events = list(eng._trace_events)
+    expected = sorted({("loop", capacity_class(n), eng.plan)
+                       for n in sizes})
+    findings: List[Finding] = []
+    if sorted(events) != expected:
+        findings.append(_finding(
+            label, "loop trace count differs from one-per-capacity-class",
+            f"traced={sorted(events)} expected={expected}"))
+    cache_keys = sorted(eng._loop_cache.keys())
+    want_keys = sorted({(capacity_class(n), eng.plan, "device")
+                        for n in sizes})
+    if cache_keys != want_keys:
+        findings.append(_finding(
+            label, "loop cache keys are not (capacity class, plan, mode)",
+            f"keys={cache_keys} expected={want_keys}"))
+    report = {
+        "label": label, "plan": eng.plan, "sizes": list(sizes),
+        "traces": len(events),
+        "capacity_classes": sorted({c for _, c, _ in events}),
+        "findings": len(findings),
+    }
+    return findings, report
+
+
+# plan regimes get distinct cache entries, so each is audited on a fresh
+# engine rather than by flipping ``plan`` on a live one (the device
+# carry's layout is plan-dependent)
+DEFAULT_RECOMPILE_AUDITS: Tuple[Tuple[str, Dict[str, Any]], ...] = (
+    ("uq1-static", dict(workload="uq1", plan="static")),
+    ("uq1-adaptive", dict(workload="uq1", plan="adaptive")),
+    ("uq4-static", dict(workload="uq4", plan="static")),
+)
+
+
+def run_recompile_audit(audits: Sequence[Tuple[str, Dict[str, Any]]] = None
+                        ) -> Tuple[List[Finding], List[Dict[str, Any]]]:
+    from .jaxpr_audit import build_engine
+
+    findings: List[Finding] = []
+    reports: List[Dict[str, Any]] = []
+    for label, spec in (audits if audits is not None
+                        else DEFAULT_RECOMPILE_AUDITS):
+        eng = build_engine(**spec)
+        f, r = audit_recompile_engine(eng, label)
+        findings.extend(f)
+        reports.append(r)
+    return findings, reports

@@ -1,0 +1,149 @@
+"""Rules: host escapes out of traced code, and stale device-scalar pulls.
+
+``host-escape`` — inside traced functions:
+
+* ``x.item()`` — concretizes a tracer (errors under jit);
+* ``float(x)`` / ``int(x)`` / ``bool(x)`` on an argument or a jnp/jax
+  result — same concretization, often hidden in format strings;
+* any ``np.*()`` / ``numpy.*()`` *call* — numpy ops on tracers either
+  fail or silently fall back to host round-trips.  Bare dtype references
+  (``np.int32`` as an argument) are fine and not flagged.
+
+``estimator-pull`` — in sampler classes that read the estimation
+subsystem's device-backed running stats (``size_stats`` /
+``overlap_stats``): the ``.mean`` / ``.count`` / ``.variance`` /
+``.half_width`` properties each pull a device scalar to host.  Reading
+them from sampling-hot-path methods re-syncs unchanged state once per
+candidate; those reads belong in the refresh path (method names starting
+with ``_refresh``, ``observe`` or ``__init__``) with the host floats
+memoised for the hot path.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List, Set
+
+from ..findings import Finding
+from ..lint import Rule, SourceModule, attr_chain
+from .tracer_flow import _tracer_params
+
+_PULL_PROPS = {"mean", "count", "variance", "m2", "half_width"}
+_STATS_TAILS = {"size_stats", "overlap_stats"}
+_EXEMPT_PREFIXES = ("_refresh", "__init__", "observe", "warm")
+
+
+def _mentions_tracer(node: ast.AST, params: Set[str]) -> str:
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Call):
+            chain = attr_chain(sub.func)
+            if chain.split(".", 1)[0] in ("jnp", "jax", "lax"):
+                return chain
+        if isinstance(sub, ast.Name) and sub.id in params:
+            return sub.id
+    return ""
+
+
+class HostEscapeRule(Rule):
+    name = "host-escape"
+    description = (".item()/float()/int()/bool()/np.* host escapes inside "
+                   "traced functions")
+
+    def check_module(self, mod: SourceModule) -> Iterable[Finding]:
+        out: List[Finding] = []
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            fn = mod.in_traced(node)
+            if fn is None:
+                continue
+            scope = mod.qualname(fn)
+            # x.item()
+            if (isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "item" and not node.args):
+                out.append(Finding(
+                    rule=self.name, path=mod.rel, line=node.lineno,
+                    scope=scope,
+                    message="`.item()` concretizes a tracer in traced code",
+                    detail="item"))
+                continue
+            # float()/int()/bool() on tracer-ish values
+            if isinstance(node.func, ast.Name) \
+                    and node.func.id in ("float", "int", "bool") \
+                    and node.args:
+                tok = _mentions_tracer(node.args[0],
+                                       _tracer_params(mod, fn))
+                if tok:
+                    out.append(Finding(
+                        rule=self.name, path=mod.rel, line=node.lineno,
+                        scope=scope,
+                        message=(f"`{node.func.id}({tok}...)` pulls a "
+                                 "tracer to host in traced code"),
+                        detail=f"{node.func.id}:{tok}"))
+                continue
+            # np.*() calls
+            chain = attr_chain(node.func)
+            root = chain.split(".", 1)[0]
+            if root in ("np", "numpy") and "." in chain:
+                out.append(Finding(
+                    rule=self.name, path=mod.rel, line=node.lineno,
+                    scope=scope,
+                    message=f"numpy call `{chain}()` inside traced code "
+                            "runs on host",
+                    detail=chain))
+        return out
+
+
+class EstimatorPullRule(Rule):
+    name = "estimator-pull"
+    description = ("device-backed running-stat properties read outside the "
+                   "refresh path (per-candidate device→host syncs)")
+
+    def check_module(self, mod: SourceModule) -> Iterable[Finding]:
+        out: List[Finding] = []
+        for cls in mod.classes:
+            methods = [n for n in cls.body
+                       if isinstance(n, (ast.FunctionDef,
+                                         ast.AsyncFunctionDef))]
+            if not any(m.name == "sample" for m in methods):
+                continue            # only sampler front-ends have a hot path
+            for meth in methods:
+                if meth.name.startswith(_EXEMPT_PREFIXES):
+                    continue
+                stat_vars = self._stat_vars(meth)
+                if not stat_vars:
+                    continue
+                for node in ast.walk(meth):
+                    read = None
+                    if (isinstance(node, ast.Attribute)
+                            and node.attr in _PULL_PROPS
+                            and isinstance(node.value, ast.Name)
+                            and node.value.id in stat_vars):
+                        read = f"{node.value.id}.{node.attr}"
+                    if read is None:
+                        continue
+                    out.append(Finding(
+                        rule=self.name, path=mod.rel, line=node.lineno,
+                        scope=mod.qualname(meth),
+                        message=(f"`{read}` pulls a device stat scalar in "
+                                 f"`{meth.name}` (hot path); memoise it in "
+                                 "the refresh path instead"),
+                        detail=f"{meth.name}:{read}"))
+        return out
+
+    @staticmethod
+    def _stat_vars(meth: ast.AST) -> Set[str]:
+        """Local names bound from ``*.size_stats`` / ``*.overlap_stats``."""
+        names: Set[str] = set()
+        for node in ast.walk(meth):
+            if not isinstance(node, ast.Assign) or len(node.targets) != 1:
+                continue
+            tgt = node.targets[0]
+            if not isinstance(tgt, ast.Name):
+                continue
+            for sub in ast.walk(node.value):
+                if isinstance(sub, ast.Attribute) \
+                        and sub.attr in _STATS_TAILS:
+                    names.add(tgt.id)
+                    break
+        return names

@@ -1,0 +1,57 @@
+"""Rule: wall-clock / host-RNG nondeterminism inside traced functions.
+
+The engine's parity story (device loop vs host twin, record-mode replay)
+requires traced programs to be pure functions of their inputs and the
+threaded PRNG keys.  A ``time.time()`` / ``datetime.now()`` /
+``np.random`` / ``random`` / ``uuid`` call inside a traced function is
+baked in at *trace* time — the program replays one frozen sample of it,
+differs across retraces, and silently breaks bitwise pins.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List
+
+from ..findings import Finding
+from ..lint import Rule, SourceModule, attr_chain
+
+_BANNED_CHAINS = {
+    "time.time", "time.time_ns", "time.perf_counter",
+    "time.perf_counter_ns", "time.monotonic", "time.monotonic_ns",
+    "os.urandom", "uuid.uuid1", "uuid.uuid4",
+    "secrets.token_bytes", "secrets.randbits",
+}
+_BANNED_PREFIXES = ("np.random.", "numpy.random.", "random.",
+                    "datetime.now", "datetime.utcnow", "datetime.today",
+                    "datetime.datetime.now", "datetime.datetime.utcnow",
+                    "datetime.date.today")
+
+
+class NondeterminismRule(Rule):
+    name = "nondeterminism"
+    description = ("wall-clock / host-RNG / uuid calls inside traced "
+                   "functions (frozen at trace time)")
+
+    def check_module(self, mod: SourceModule) -> Iterable[Finding]:
+        out: List[Finding] = []
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            fn = mod.in_traced(node)
+            if fn is None:
+                continue
+            chain = attr_chain(node.func)
+            if not chain:
+                continue
+            hit = chain in _BANNED_CHAINS or any(
+                chain == p.rstrip(".") or chain.startswith(p)
+                for p in _BANNED_PREFIXES)
+            if hit:
+                out.append(Finding(
+                    rule=self.name, path=mod.rel, line=node.lineno,
+                    scope=mod.qualname(fn),
+                    message=(f"nondeterministic call `{chain}()` inside "
+                             "traced function is frozen at trace time"),
+                    detail=chain))
+        return out

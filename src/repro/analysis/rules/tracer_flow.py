@@ -1,0 +1,123 @@
+"""Rule: Python control flow on tracers inside traced functions.
+
+``if``/``while``/ternary tests that depend on a traced function's array
+arguments (or on the result of a ``jnp``/``jax`` call) execute *host*
+Python during tracing: at best they bake one branch into the program, at
+worst they raise ``TracerBoolConversionError`` at runtime.  Structural
+``is None`` / ``is not None`` dispatch on optional arguments is the one
+sanctioned pattern (it is static at trace time) and is excluded.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List, Optional, Set
+
+from ..findings import Finding
+from ..lint import Rule, SourceModule, attr_chain
+
+
+def _is_none_check(test: ast.AST) -> bool:
+    while isinstance(test, ast.UnaryOp) and isinstance(test.op, ast.Not):
+        test = test.operand
+    if isinstance(test, ast.BoolOp):
+        return all(_is_none_check(v) for v in test.values)
+    return (isinstance(test, ast.Compare)
+            and all(isinstance(op, (ast.Is, ast.IsNot)) for op in test.ops))
+
+
+_SCALAR_ANNOTATIONS = {"bool", "int", "float", "str", "None"}
+_STATIC_ATTRS = {"shape", "ndim", "dtype"}
+
+
+def _is_static_annotation(ann: ast.AST) -> bool:
+    """Python-scalar annotations declare static (non-tracer) config:
+    ``bool`` / ``int`` / ``float`` / ``str``, ``Optional[...]`` and
+    ``... | None`` unions of those."""
+    if isinstance(ann, ast.Constant):
+        return ann.value is None
+    if isinstance(ann, ast.Name):
+        return ann.id in _SCALAR_ANNOTATIONS
+    if isinstance(ann, ast.Subscript):
+        base = ann.value
+        if isinstance(base, ast.Name) and base.id in ("Optional", "Union"):
+            inner = ann.slice
+            elts = inner.elts if isinstance(inner, ast.Tuple) else [inner]
+            return all(_is_static_annotation(e) for e in elts)
+        return False
+    if isinstance(ann, ast.BinOp) and isinstance(ann.op, ast.BitOr):
+        return (_is_static_annotation(ann.left)
+                and _is_static_annotation(ann.right))
+    return False
+
+
+def _tracer_params(mod: SourceModule, fn: ast.FunctionDef) -> Set[str]:
+    """Parameters of ``fn`` and of its traced ancestors (closure tracers).
+    Parameters annotated with Python scalar types are static config, not
+    tracers, and are excluded."""
+    names: Set[str] = set()
+    traced = mod.traced_functions()
+    cur = fn
+    while cur is not None:
+        if id(cur) in traced:
+            args = cur.args
+            for a in (args.posonlyargs + args.args + args.kwonlyargs):
+                if a.arg in ("self", "cls"):
+                    continue
+                if a.annotation is not None \
+                        and _is_static_annotation(a.annotation):
+                    continue
+                names.add(a.arg)
+        cur = mod.enclosing_function(cur)
+    return names
+
+
+def _offender(test: ast.AST, params: Set[str],
+              mod: Optional[SourceModule] = None) -> str:
+    """Stable token for what makes the test tracer-dependent ('' = clean)."""
+    for node in ast.walk(test):
+        if isinstance(node, ast.Call):
+            chain = attr_chain(node.func)
+            root = chain.split(".", 1)[0]
+            if root in ("jnp", "jax", "lax"):
+                return chain
+    for node in ast.walk(test):
+        if isinstance(node, ast.Name) and node.id in params:
+            # x.shape / x.ndim / x.dtype are static at trace time
+            parent = mod.parent(node) if mod is not None else None
+            if isinstance(parent, ast.Attribute) \
+                    and parent.attr in _STATIC_ATTRS \
+                    and parent.value is node:
+                continue
+            return node.id
+    return ""
+
+
+class TracerFlowRule(Rule):
+    name = "tracer-branch"
+    description = ("Python if/while/ternary on traced-function arguments or "
+                   "jnp results inside a traced function")
+
+    def check_module(self, mod: SourceModule) -> Iterable[Finding]:
+        out: List[Finding] = []
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, (ast.If, ast.While, ast.IfExp)):
+                continue
+            fn = mod.in_traced(node)
+            if fn is None:
+                continue
+            test = node.test
+            if _is_none_check(test):
+                continue
+            tok = _offender(test, _tracer_params(mod, fn), mod)
+            if not tok:
+                continue
+            kind = {"If": "if", "While": "while",
+                    "IfExp": "ternary"}[type(node).__name__]
+            out.append(Finding(
+                rule=self.name, path=mod.rel, line=test.lineno,
+                scope=mod.qualname(fn),
+                message=(f"host `{kind}` on tracer-dependent value "
+                         f"`{tok}` inside traced function"),
+                detail=f"{kind}:{tok}"))
+        return out

@@ -450,6 +450,7 @@ class DeviceTreeJoin:
         return self._empty
 
     # -- range probe: jnp.searchsorted, or the two-phase Pallas pipeline ------
+    # analysis: traced
     def _ranges(self, i: int, q: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
         if not self.use_pallas:
             sk = self.sorted_keys[i]
@@ -475,11 +476,13 @@ class DeviceTreeJoin:
                 jnp.minimum(hi.reshape(-1)[:b], n))
 
     # -- one batch of EW tree draws (traced; jit at the call site) ------------
+    # analysis: traced
     def draw(self, key: jax.Array, batch: int
              ) -> Tuple[Dict[str, jnp.ndarray], jnp.ndarray, jnp.ndarray]:
         return self.draw_with_root(key, batch, self.root_wprefix,
                                    self.root_cols, self.n_root)
 
+    # analysis: traced
     def _residual_step(self, i: int, cfg: _NodeCfg, rows, ok, acc_ratio, u):
         """One residual edge: sorted-key probe, uniform pick, d/M factor."""
         q = _pack_jnp(rows, cfg.edge_attrs, cfg.radices)
@@ -496,6 +499,7 @@ class DeviceTreeJoin:
             rows[a] = c[child]
         return rows, ok, acc_ratio
 
+    # analysis: traced
     def draw_with_root(self, key: jax.Array, batch: int,
                        root_wprefix: jnp.ndarray,
                        root_cols: Dict[str, jnp.ndarray], n_root
@@ -602,6 +606,7 @@ class DeviceJoinMembership:
             self.rels.append((attrs, jnp.asarray(s1), jnp.asarray(fp2[order]),
                               kmax, int(rel.nrows)))
 
+    # analysis: traced
     def contains(self, rows: Dict[str, jnp.ndarray]) -> jnp.ndarray:
         """Traced probe: rows are device int32 columns of the output schema."""
         b = rows[next(iter(rows))].shape[0]
@@ -1168,8 +1173,15 @@ class JaxUnionSampler:
         self._round_jit = jax.jit(self._round_impl)
         # persistent device-loop state (fused_rounds="device"): PRNG key,
         # shortfall vector, ring banks and dead-piece flags all live on
-        # device and carry across sample() calls
-        self._loop_cache: Dict[int, object] = {}
+        # device and carry across sample() calls.  The compile cache is
+        # keyed by (capacity class, plan, mode) — not kwargs identity — so
+        # flipping `plan` post-build retraces instead of silently reusing
+        # the other plan's program, and each class compiles exactly once
+        # (audited by repro.analysis.recompile).
+        self._loop_cache: Dict[Tuple[int, str, str], object] = {}
+        # one entry appended per *trace* of the loop body (Python executes
+        # the body only while tracing); the recompile audit reads this
+        self._trace_events: List[Tuple[str, int, str]] = []
         self._dev_state = None
         # host-loop twin state (fused_rounds="host"): numpy ring banks with
         # identical FIFO semantics; allocated on first host sample
@@ -1344,6 +1356,8 @@ class JaxUnionSampler:
         shifts = jnp.asarray(self._ema_shifts)
 
         def loop_fn(state, out, n, probs_base):
+            self._trace_events.append(("loop", C, self.plan))
+
             def cond(c):
                 total, rounds, fail = c[2], c[3], c[4]
                 return (total < n) & (rounds < max_rounds) & ~fail
@@ -1435,10 +1449,11 @@ class JaxUnionSampler:
         return jax.jit(loop_fn, donate_argnums=(0, 1))
 
     def _loop_for(self, C: int):
-        fn = self._loop_cache.get(C)
+        lk = (C, self.plan, self.fused_rounds)
+        fn = self._loop_cache.get(lk)
         if fn is None:
             fn = self._build_loop(C)
-            self._loop_cache[C] = fn
+            self._loop_cache[lk] = fn
         return fn
 
     def sample_async(self, n: int):

@@ -122,6 +122,10 @@ class OnlineUnionSampler:
                     f"sampling backend {est_spec!r}; refinement walks fall "
                     "back to the host engine (pass estimator= to override)",
                     stacklevel=2)
+                obs.record_fallback(
+                    "estimator_backend",
+                    detail=f"custom sampling backend {est_spec!r} has no "
+                           "estimator twin; refinement walks use numpy")
                 est_spec = "numpy"
         est_kwargs = {}
         if mesh is not None and est_spec != "jax":
@@ -178,6 +182,7 @@ class OnlineUnionSampler:
             for _ in range(warm_rounds):
                 self.estimator.observe([j], rounds=1)
         self._refresh_pools()
+        self._refresh_size_cache()
 
         self.sources = {j.name: self.backend.source(j.name)
                         for j in self.joins}
@@ -214,14 +219,30 @@ class OnlineUnionSampler:
         s = p.sum()
         return p / s if s > 0 else np.full(len(p), 1.0 / len(p))
 
+    def _refresh_size_cache(self) -> None:
+        """Pull the walk-refined join sizes to host, once per refresh.
+
+        Under the jax estimator ``size_stats`` are device-backed running
+        accumulators: every ``.count`` / ``.mean`` read is a device→host
+        scalar sync.  The accumulators only change when the estimator
+        observes, so the sampling hot path (reuse acceptance in
+        ``_try_reuse`` runs per candidate) reads this host-side memo
+        instead of re-syncing unchanged device state."""
+        cache: Dict[str, float] = {}
+        for name in self.names:
+            st = self.estimator.size_stats.get(name)
+            if st is not None and st.count > 0 and st.mean > 0:
+                # wander-join walks estimate the unfiltered join; scale by
+                # the §8.3 predicate selectivity so reuse acceptance and the
+                # refined cover see the *filtered* size
+                cache[name] = (st.mean
+                               * selectivity_factor(self._by_name[name]))
+            else:
+                cache[name] = max(self.cover.join_sizes[name], 1.0)
+        self._size_est_cache = cache
+
     def _join_size_est(self, name: str) -> float:
-        st = self.estimator.size_stats.get(name)
-        if st is not None and st.count > 0 and st.mean > 0:
-            # wander-join walks estimate the unfiltered join; scale by the
-            # §8.3 predicate selectivity so reuse acceptance and the refined
-            # cover see the *filtered* size
-            return st.mean * selectivity_factor(self._by_name[name])
-        return max(self.cover.join_sizes[name], 1.0)
+        return self._size_est_cache[name]
 
     def _refresh_parameters(self) -> None:
         """Re-estimate sizes/overlaps from walks; rebuild cover; backtrack."""
@@ -234,6 +255,7 @@ class OnlineUnionSampler:
         if len(self.joins) > 2:
             self.estimator.observe(self.joins, rounds=1)
         self._refresh_pools()
+        self._refresh_size_cache()
         ostats = self.estimator.overlap_stats
         est_fn = (lambda d: ostats[frozenset(j.name for j in d)].mean
                   if frozenset(j.name for j in d) in ostats else 0.0)

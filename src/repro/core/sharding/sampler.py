@@ -442,6 +442,7 @@ class ShardedUnionSampler(JaxUnionSampler):
         shifts = jnp.asarray(self._ema_shifts)
 
         def loop_fn(shr, rep, out, n, probs_base, st):
+            self._trace_events.append(("loop", C, self.plan))
             sid = jax.lax.axis_index(axis)
 
             def cond(c):
@@ -592,4 +593,9 @@ class ShardedUnionSampler(JaxUnionSampler):
             return (state2, out2, total[0], rounds[0], fail[0], stats[0],
                     pstats[0])
 
+        # expose the jitted program and its arg plumbing so the static
+        # analyzer (repro.analysis.jaxpr_audit) can lower it without running
+        run._prog = prog
+        run._rep_keys = rep_keys
+        run._st_global = st_global
         return run

@@ -123,7 +123,8 @@ def softcap(logits: jnp.ndarray, cap: float) -> jnp.ndarray:
 # ---------------------------------------------------------------------------
 
 
-def _attn_chunk(q, k, v, qpos, kpos, *, scale, causal, window, cap):
+def _attn_chunk(q, k, v, qpos, kpos, *, scale: float, causal: bool,
+                window: Optional[int], cap: float):
     """One (q_chunk × kv_chunk) online-softmax tile. fp32 accumulation."""
     # q (B, KV, G, Cq, D), k/v (B, KV, Ck, D)
     logits = jnp.einsum("bkgqd,bkcd->bkgqc", q, k,
@@ -210,7 +211,8 @@ def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
 # ---------------------------------------------------------------------------
 
 
-def _mask_for(qpos, kpos, causal, window, prefix_len):
+def _mask_for(qpos, kpos, causal: bool, window: Optional[int],
+              prefix_len: Optional[int]):
     mask = jnp.ones((qpos.shape[0], kpos.shape[0]), dtype=bool)
     if causal:
         c = qpos[:, None] >= kpos[None, :]

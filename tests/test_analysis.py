@@ -1,0 +1,345 @@
+"""Static invariant analyzer: rule fixtures, baseline policy, self-run,
+and the jaxpr/recompile audits against the real engines.
+
+Layer 1/3 (AST lint) is exercised on small seeded fixtures — one
+tripping and one clean snippet per rule family — so a rule that stops
+firing (or starts over-firing) fails here before it silently weakens the
+CI gate.  The self-run test then asserts the shipped tree is clean
+modulo the justified baseline, which is what the ``analysis-gate`` CI
+job enforces.  Layer 2 builds the same UQ1/UQ4 engines tier-1 uses and
+pins the structural invariants: device/host RNG-primitive parity, zero
+collectives unsharded, host-sequence-plus-one-banking-``all_gather``
+under a world=1 mesh, donated carries, and one loop trace per capacity
+class.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.analysis.findings import Baseline, Finding
+from repro.analysis.lint import run_lint
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+GATE = os.path.join(REPO, "scripts", "analysis_gate.py")
+
+
+def _lint_snippet(tmp_path, source, name="snippet.py", prefix=None):
+    p = tmp_path / name
+    p.write_text(textwrap.dedent(source))
+    prefixes = [prefix] if prefix is not None else None
+    return run_lint([str(p)], rel_prefixes=prefixes)
+
+
+def _rules(findings):
+    return sorted({f.rule for f in findings})
+
+
+# -- layer 1: rule fixtures ---------------------------------------------------
+
+def test_tracer_branch_fires_and_static_config_is_clean(tmp_path):
+    bad = _lint_snippet(tmp_path, """
+        import jax
+
+        @jax.jit
+        def f(x, y):
+            if x > 0:
+                return y
+            return -y
+    """)
+    assert _rules(bad) == ["tracer-branch"]
+
+    clean = _lint_snippet(tmp_path, """
+        import jax
+        from typing import Optional
+
+        @jax.jit
+        def f(x, causal: bool, window: Optional[int]):
+            if causal:                  # static config flag
+                x = x + 1
+            if window is not None:      # is-None check is static
+                x = x * 2
+            if x.shape[0] == 4:         # shape info is static
+                x = x - 1
+            return x
+    """)
+    assert clean == []
+
+
+def test_host_escape_fires_only_in_traced_functions(tmp_path):
+    bad = _lint_snippet(tmp_path, """
+        import jax
+        import numpy as np
+
+        @jax.jit
+        def f(x):
+            a = float(x)
+            b = x.item()
+            c = np.maximum(x, 0)
+            return a + b + c
+    """)
+    assert _rules(bad) == ["host-escape"] and len(bad) == 3
+
+    clean = _lint_snippet(tmp_path, """
+        import numpy as np
+
+        def host_only(x):
+            return float(x) + np.maximum(x, 0).item()
+    """)
+    assert clean == []
+
+
+def test_fixed_point_rule_fires_on_marked_functions_only(tmp_path):
+    bad = _lint_snippet(tmp_path, """
+        def budget(a, b):  # analysis: fixed-point
+            return a * 0.5 + b / 2
+    """)
+    assert _rules(bad) == ["f64-in-planner"]
+
+    clean = _lint_snippet(tmp_path, """
+        def budget(a, b):  # analysis: fixed-point
+            return (a >> 1) + b // 2
+
+        def unmarked(a):
+            return a * 0.5
+    """)
+    assert clean == []
+
+
+def test_nondeterminism_rule(tmp_path):
+    bad = _lint_snippet(tmp_path, """
+        import jax, time
+
+        @jax.jit
+        def f(x):
+            return x + time.time()
+    """)
+    assert _rules(bad) == ["nondeterminism"]
+
+
+def test_int32_packing_rule_scoped_to_core(tmp_path):
+    src = """
+        import numpy as np
+
+        def pack(cols, widths):
+            key = np.zeros(4, np.int32)
+            for c, w in zip(cols, widths):
+                key = key * w + c
+            return key
+    """
+    assert _rules(_lint_snippet(tmp_path, src, prefix="core")) \
+        == ["int32-overflow"]
+    # same code outside core/ (host CLI arithmetic) is not flagged
+    assert _lint_snippet(tmp_path, src, prefix="launch") == []
+    # a module-level domain guard clears it
+    guarded = src + "        _I32_LIM = 2 ** 31\n"
+    assert _lint_snippet(tmp_path, guarded, prefix="core") == []
+
+
+def test_missing_fallback_rule(tmp_path):
+    bad = _lint_snippet(tmp_path, """
+        import warnings
+
+        def pick(kind):
+            if kind != "jax":
+                warnings.warn("no device twin; falling back to host")
+            return kind
+    """)
+    assert _rules(bad) == ["missing-fallback"]
+
+    clean = _lint_snippet(tmp_path, """
+        import warnings
+        from repro import obs
+
+        def pick(kind):
+            if kind != "jax":
+                warnings.warn("no device twin; falling back to host")
+                obs.record_fallback("backend", detail=kind)
+            return kind
+    """)
+    assert clean == []
+
+
+def test_lock_discipline_rule(tmp_path):
+    bad = _lint_snippet(tmp_path, """
+        import threading
+
+        class Service:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self._cursor = 0
+                self._q = None
+
+            def request(self):
+                with self._lock:
+                    self._cursor += 1
+                    return self._q.get()
+
+            def reset(self):
+                self._cursor = 0
+    """)
+    assert _rules(bad) == ["lock-discipline"] and len(bad) == 2
+
+    clean = _lint_snippet(tmp_path, """
+        import threading
+
+        class Service:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self._cursor = 0
+                self._q = None
+
+            def request(self):
+                with self._lock:
+                    self._cursor += 1
+                return self._q.get(timeout=1.0)
+
+            def reset(self):
+                with self._lock:
+                    self._cursor = 0
+    """)
+    assert clean == []
+
+
+def test_estimator_pull_rule(tmp_path):
+    bad = _lint_snippet(tmp_path, """
+        class Online:
+            def _score(self, name):
+                st = self.estimator.size_stats[name]
+                return st.mean * st.count
+
+            def sample(self, n):
+                return [self._score(j) for j in range(n)]
+    """)
+    assert _rules(bad) == ["estimator-pull"]
+
+    clean = _lint_snippet(tmp_path, """
+        class Online:
+            def _refresh_size_cache(self):
+                out = {}
+                for name, st in self.estimator.size_stats.items():
+                    out[name] = st.mean * st.count
+                self._cache = out
+
+            def sample(self, n):
+                return [self._cache for _ in range(n)]
+    """)
+    assert clean == []
+
+
+def test_inline_allow_suppresses(tmp_path):
+    clean = _lint_snippet(tmp_path, """
+        import jax
+
+        @jax.jit
+        def f(x, y):
+            if x > 0:  # analysis: allow(tracer-branch)
+                return y
+            return -y
+    """)
+    assert clean == []
+
+
+# -- fingerprints and baseline ------------------------------------------------
+
+def test_fingerprint_ignores_line_numbers():
+    a = Finding("r", "p.py", 10, "f", "msg", detail="tok")
+    b = Finding("r", "p.py", 99, "f", "other msg", detail="tok")
+    assert a.fingerprint == b.fingerprint
+
+
+def test_baseline_split_and_stale(tmp_path):
+    f1 = Finding("r", "p.py", 1, "f", "m", detail="one")
+    f2 = Finding("r", "p.py", 2, "g", "m", detail="two")
+    bl = tmp_path / "bl.json"
+    bl.write_text(json.dumps({"findings": [
+        {"fingerprint": f1.fingerprint, "reason": "known, accepted"},
+        {"fingerprint": "deadbeefdeadbeef", "reason": "gone"},
+    ]}))
+    base = Baseline.load(str(bl))
+    active, suppressed = base.split([f1, f2])
+    assert active == [f2] and suppressed == [f1]
+    assert base.stale([f1, f2]) == ["deadbeefdeadbeef"]
+
+
+def test_baseline_requires_reason(tmp_path):
+    bl = tmp_path / "bl.json"
+    bl.write_text(json.dumps({"findings": [{"fingerprint": "abc"}]}))
+    with pytest.raises(ValueError):
+        Baseline.load(str(bl))
+
+
+# -- the gate, end to end -----------------------------------------------------
+
+def test_gate_exits_nonzero_on_seeded_fixture(tmp_path):
+    p = tmp_path / "seeded.py"
+    p.write_text(textwrap.dedent("""
+        import jax, time
+
+        @jax.jit
+        def f(x):
+            if x > 0:
+                return float(x)
+            return x + time.time()
+    """))
+    proc = subprocess.run(
+        [sys.executable, GATE, "--layers", "ast", str(p), "--json"],
+        capture_output=True, text=True)
+    assert proc.returncode == 1, proc.stdout + proc.stderr
+    out = json.loads(proc.stdout)
+    fired = {f["rule"] for f in out["findings"]}
+    assert {"tracer-branch", "host-escape", "nondeterminism"} <= fired
+
+
+def test_gate_self_run_is_clean_modulo_baseline(tmp_path):
+    stats = tmp_path / "stats.json"
+    proc = subprocess.run(
+        [sys.executable, GATE, "--layers", "ast",
+         "--baseline", os.path.join(REPO, "analysis_baseline.json"),
+         "--stats", str(stats)],
+        capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    data = json.loads(stats.read_text())
+    assert data["active"] == 0
+    assert data["stale_baseline"] == 0
+
+
+# -- layer 2: jaxpr + recompile audits on the real engines --------------------
+
+jax = pytest.importorskip("jax")
+
+
+@pytest.mark.parametrize("label,spec", [
+    ("uq1-static", dict(workload="uq1", plan="static")),
+    ("uq1-adaptive", dict(workload="uq1", plan="adaptive")),
+    ("uq4-static", dict(workload="uq4", plan="static")),
+])
+def test_jaxpr_audit_unsharded(label, spec):
+    from repro.analysis.jaxpr_audit import audit_unsharded, build_engine
+    findings, report = audit_unsharded(build_engine(**spec), label)
+    assert findings == [], [f.render() for f in findings]
+    assert report["rng"], "device loop must draw RNG primitives"
+    assert report["collectives"] == []
+
+
+def test_jaxpr_audit_sharded_world1():
+    from repro.analysis.jaxpr_audit import audit_sharded, build_engine
+    eng = build_engine(workload="uq1", plan="static", world=1)
+    findings, report = audit_sharded(eng, "uq1-sharded-w1")
+    assert findings == [], [f.render() for f in findings]
+    # the whole round body rides on a single banking exchange
+    assert report["collectives"] == ["axis_index", "all_gather"]
+
+
+def test_recompile_audit_one_trace_per_capacity_class():
+    from repro.analysis.jaxpr_audit import build_engine
+    from repro.analysis.recompile import audit_recompile_engine
+    eng = build_engine(workload="uq1", plan="static")
+    findings, report = audit_recompile_engine(eng, "uq1-static")
+    assert findings == [], [f.render() for f in findings]
+    assert report["traces"] == 2
+    assert report["capacity_classes"] == [1024, 2048]
